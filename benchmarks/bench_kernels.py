@@ -1,0 +1,85 @@
+"""Kernel micro-bench: Pallas (interpret) vs jnp oracle, us/call + derived
+GB/s.  Absolute numbers are CPU-interpret timings (the TARGET is TPU); the
+oracle column is the meaningful CPU-comparable baseline.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import emit
+
+
+def _t(fn, reps=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(fast: bool = True):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.delta_snapshot.ops import dirty_block_mask
+    from repro.kernels.delta_snapshot.ref import dirty_block_mask_reference
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_reference
+    from repro.kernels.rglru_scan.ops import rglru_scan
+    from repro.kernels.rglru_scan.ref import rglru_reference
+    from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+    from repro.kernels.rwkv6_scan.ref import rwkv6_reference
+
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    b, s, h, d = (1, 256, 2, 64) if fast else (2, 1024, 4, 64)
+    q, k, v = (jax.random.normal(kk, (b, s, h, d)) for kk in ks[:3])
+    bytes_moved = 4 * q.size * 4
+    t_kern = _t(lambda: jax.block_until_ready(flash_attention(q, k, v)))
+    t_ref = _t(lambda: jax.block_until_ready(attention_reference(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2))))
+    rows.append({"name": "flash_attention", "us_per_call": round(t_kern, 1),
+                 "ref_us": round(t_ref, 1),
+                 "derived": f"GB/s={bytes_moved/t_kern/1e3:.3f}"})
+
+    t_len = 64 if fast else 256
+    r = jax.random.normal(ks[3], (1, t_len, 2, 32)) * 0.5
+    kk2 = jax.random.normal(ks[4], (1, t_len, 2, 32)) * 0.5
+    vv = jax.random.normal(ks[5], (1, t_len, 2, 32)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[6], (1, t_len, 2, 32)))
+    u = jax.random.normal(ks[7], (2, 32)) * 0.3
+    t_kern = _t(lambda: jax.block_until_ready(rwkv6_scan(r, kk2, vv, w, u, block_t=32)))
+    t_ref = _t(lambda: jax.block_until_ready(rwkv6_reference(
+        jnp.swapaxes(r, 1, 2), jnp.swapaxes(kk2, 1, 2), jnp.swapaxes(vv, 1, 2),
+        jnp.swapaxes(w, 1, 2), u)))
+    rows.append({"name": "rwkv6_scan", "us_per_call": round(t_kern, 1),
+                 "ref_us": round(t_ref, 1),
+                 "derived": f"tok/s={1e6*t_len/t_kern:.0f}"})
+
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 128, 128)))
+    x = jax.random.normal(ks[1], (2, 128, 128))
+    t_kern = _t(lambda: jax.block_until_ready(rglru_scan(a, x, block_t=64)))
+    t_ref = _t(lambda: jax.block_until_ready(rglru_reference(a, x)))
+    rows.append({"name": "rglru_scan", "us_per_call": round(t_kern, 1),
+                 "ref_us": round(t_ref, 1),
+                 "derived": f"GB/s={2*a.size*4/t_kern/1e3:.3f}"})
+
+    n = 1 << 18
+    xs = jax.random.normal(ks[2], (n,))
+    ps = xs.at[1234].add(1.0)
+    t_kern = _t(lambda: jax.block_until_ready(dirty_block_mask(xs, ps)))
+    nb = n // 256
+    t_ref = _t(lambda: jax.block_until_ready(dirty_block_mask_reference(
+        xs.reshape(nb, 256), ps.reshape(nb, 256))))
+    rows.append({"name": "delta_snapshot", "us_per_call": round(t_kern, 1),
+                 "ref_us": round(t_ref, 1),
+                 "derived": f"GB/s={2*n*4/t_kern/1e3:.3f}"})
+    emit(rows, "kernels")
+    return rows
+
+
+if __name__ == "__main__":
+    run(fast=True)

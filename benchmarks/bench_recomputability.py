@@ -1,0 +1,88 @@
+"""Paper Fig 3 + Fig 6: application recomputability across the suite.
+
+Per app: S1–S4 class fractions without EasyCrash (Fig 3), then the staged
+improvements (Fig 6): + critical-object selection at loop end, + selected
+code regions (the full workflow plan), and the costly best-achievable
+upper bound.  Also reports the headline "fraction of failed crashes
+transformed into correct recomputation".
+"""
+from __future__ import annotations
+
+from .common import APPS, Timer, campaign_size, emit
+
+
+def run(fast: bool = True):
+    from repro.core import CacheConfig, CrashTester, PersistPlan
+    from repro.core.workflow import run_workflow
+    from repro.hpc.suite import bench_app, ci_app, default_cache
+
+    n = campaign_size(fast)
+    rows = []
+    agg_base_fail = 0.0
+    agg_fixed = 0.0
+    for name in APPS:
+        with Timer() as t:
+            app = ci_app(name) if fast else bench_app(name)
+            cache = default_cache(app)
+            wf = run_workflow(app, n_tests=n, cache=cache, seed=0)
+            validated = CrashTester(app, wf.plan, cache, seed=777).run_campaign(n)
+            best = wf.best_campaign
+        base_fr = wf.baseline_campaign.class_fractions()
+        val_fr = validated.class_fractions()
+        base_fail = 1.0 - base_fr["S1"]
+        transformed = max(0.0, val_fr["S1"] - base_fr["S1"])
+        agg_base_fail += base_fail
+        agg_fixed += transformed
+        rows.append({
+            "app": name,
+            "S1_base": round(base_fr["S1"], 3),
+            "S2_base": round(base_fr["S2"], 3),
+            "S3_base": round(base_fr["S3"], 3),
+            "S4_base": round(base_fr["S4"], 3),
+            "recomp_objects_only": round(
+                CrashTester(app, PersistPlan.at_loop_end(wf.critical, app), cache,
+                            seed=5).run_campaign(n).recomputability, 3),
+            "recomp_easycrash": round(val_fr["S1"], 3),
+            "recomp_best": round(best.recomputability, 3),
+            "critical_objects": "|".join(wf.critical),
+            "plan_regions": "|".join(f"{k}:{x}" for k, x in sorted(wf.plan.region_freq.items())),
+            "seconds": round(t.dt, 1),
+        })
+    # the ML workload the paper's §2.2 calls out (CNN/SGD training):
+    # reduced-transformer Adam training as an EasyCrash app
+    try:
+        from repro.core.cache_sim import CacheConfig as CC
+        from repro.models.train_app import LMTrainApp
+
+        napp = 24 if fast else 60
+        app = LMTrainApp(n_iters=25, loss_band=1.02)
+        st = app.init(0)
+        ws = sum(v.nbytes // 64 for v in st.values())
+        cache = CC(capacity_blocks=int(ws * 0.45))
+        base = CrashTester(app, PersistPlan.none(), cache, seed=0).run_campaign(napp)
+        ec = CrashTester(app, PersistPlan.at_loop_end(("params",), app), cache,
+                         seed=0).run_campaign(napp)
+        bf = base.class_fractions()
+        rows.append({
+            "app": "lm-train",
+            "S1_base": round(bf["S1"], 3), "S2_base": round(bf["S2"], 3),
+            "S3_base": round(bf["S3"], 3), "S4_base": round(bf["S4"], 3),
+            "recomp_objects_only": round(ec.recomputability, 3),
+            "recomp_easycrash": round(ec.recomputability, 3),
+            "recomp_best": "",
+            "critical_objects": "params",
+            "plan_regions": "1:1",
+            "seconds": "",
+        })
+    except Exception as e:  # noqa: BLE001
+        print(f"[lm-train row skipped: {e}]")
+    if agg_base_fail > 0:
+        print(f"[headline] EasyCrash transforms {100 * agg_fixed / agg_base_fail:.0f}% "
+              f"of failed crashes into correct recomputation "
+              f"(paper: 54%)")
+    emit(rows, "recomputability")
+    return rows
+
+
+if __name__ == "__main__":
+    run(fast=True)

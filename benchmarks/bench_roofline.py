@@ -1,0 +1,62 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/results/dryrun/*.json and emits, per (arch x shape x mesh):
+compute/memory/collective seconds, the dominant term, model-vs-HLO FLOP
+ratio, per-device HBM bytes, and the roofline fraction
+(dominant-term lower bound: useful_time / dominant_term).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import DRYRUN_DIR, emit
+
+PEAK = 197e12
+
+
+def run(fast: bool = True):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        d = json.load(open(path))
+        if d.get("status") == "skipped":
+            rows.append({
+                "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+                "status": "skipped", "dominant": "-", "compute_s": "-",
+                "memory_s": "-", "collective_s": "-", "useful_ratio": "-",
+                "roofline_fraction": "-", "hbm_gb": "-", "note": d["reason"][:60],
+            })
+            continue
+        if d.get("status") != "ok":
+            rows.append({
+                "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+                "status": "error", "dominant": "-", "compute_s": "-",
+                "memory_s": "-", "collective_s": "-", "useful_ratio": "-",
+                "roofline_fraction": "-", "hbm_gb": "-",
+                "note": d.get("error", "")[:60],
+            })
+            continue
+        r = d["roofline"]
+        model_time = r["model_flops"] / d["n_devices"] / PEAK
+        dominant_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = model_time / dominant_s if dominant_s else 0.0
+        hbm = d.get("bytes_per_device") or 0
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "status": "ok",
+            "dominant": r["dominant"],
+            "compute_s": f"{r['compute_s']:.3e}",
+            "memory_s": f"{r['memory_s']:.3e}",
+            "collective_s": f"{r['collective_s']:.3e}",
+            "useful_ratio": round(r["useful_ratio"], 3),
+            "roofline_fraction": round(frac, 4),
+            "hbm_gb": round(hbm / 1e9, 2),
+            "note": "fits" if d.get("fits_16gb_hbm") else "OVER-HBM",
+        })
+    emit(rows, "roofline")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

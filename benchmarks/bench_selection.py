@@ -1,0 +1,55 @@
+"""Paper Fig 4a/4b + Fig 5: what to persist, and where.
+
+Fig 4a — persisting each MG data object alone (u / r / k) at loop end.
+Fig 4b — persisting u at the end of each single code region R1..R4.
+Fig 5  — three strategies: none / selected objects / all candidates.
+"""
+from __future__ import annotations
+
+from .common import APPS, Timer, campaign_size, emit
+
+
+def run(fast: bool = True):
+    from repro.core import CacheConfig, CrashTester, PersistPlan
+    from repro.core.selection import select_objects
+    from repro.hpc.suite import bench_app, ci_app, default_cache
+
+    n = campaign_size(fast)
+    app = ci_app("mg") if fast else bench_app("mg")
+    cache = default_cache(app)
+    rows = []
+
+    base = CrashTester(app, PersistPlan.none(), cache, seed=0).run_campaign(n)
+    rows.append({"figure": "4a", "config": "none", "recomputability": round(base.recomputability, 3)})
+    for obj in ("u", "r", "k"):
+        camp = CrashTester(app, PersistPlan.at_loop_end((obj,), app), cache, seed=0).run_campaign(n)
+        rows.append({"figure": "4a", "config": f"persist_{obj}",
+                     "recomputability": round(camp.recomputability, 3)})
+
+    for k in range(len(app.regions())):
+        plan = PersistPlan(objects=("u",), region_freq={k: 1})
+        camp = CrashTester(app, plan, cache, seed=0).run_campaign(n)
+        rows.append({"figure": "4b", "config": f"persist_u_at_{app.regions()[k].name}",
+                     "recomputability": round(camp.recomputability, 3)})
+
+    # Fig 5: three strategies across the suite
+    for name in APPS:
+        a = ci_app(name) if fast else bench_app(name)
+        c = default_cache(a)
+        b0 = CrashTester(a, PersistPlan.none(), c, seed=1).run_campaign(n)
+        scores = select_objects(b0, [x for x in a.candidates if x != a.iterator_object])
+        selected = tuple(s.name for s in scores if s.critical) or tuple(a.candidates[:1])
+        c_sel = CrashTester(a, PersistPlan.best(selected, a), c, seed=1).run_campaign(n)
+        c_all = CrashTester(a, PersistPlan.best(tuple(a.candidates), a), c, seed=1).run_campaign(n)
+        rows.append({
+            "figure": "5", "config": name,
+            "recomputability": f"none={b0.recomputability:.2f}"
+                               f" selected={c_sel.recomputability:.2f}"
+                               f" all={c_all.recomputability:.2f}",
+        })
+    emit(rows, "selection")
+    return rows
+
+
+if __name__ == "__main__":
+    run(fast=True)

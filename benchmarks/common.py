@@ -1,0 +1,42 @@
+"""Shared benchmark plumbing: app instances, campaign settings, CSV output."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+APPS = ("cg", "mg", "kmeans", "montecarlo", "heat")
+
+
+def campaign_size(fast: bool) -> int:
+    return 60 if fast else 300
+
+
+def emit(rows: List[Dict[str, object]], name: str) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    path = os.path.join(RESULTS_DIR, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r.get(k, "")) for k in keys) + "\n")
+    print(f"[{name}] {len(rows)} rows -> {path}")
+    for r in rows:
+        print("  " + ", ".join(f"{k}={r[k]}" for k in keys))
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

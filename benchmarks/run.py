@@ -1,0 +1,67 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_recomputability — Fig 3 + Fig 6
+  bench_selection       — Fig 4a/4b + Fig 5
+  bench_persist_overhead— Table 4
+  bench_nvm_writes      — Fig 9
+  bench_efficiency      — Fig 10 + Fig 11
+  bench_kernels         — Pallas kernels vs oracles (us/call CSV)
+  bench_roofline        — §Roofline table from the dry-run artifacts
+
+``python -m benchmarks.run [--full]`` — default is the fast (CI-sized)
+configuration; --full uses the paper-sized campaigns.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    fast = not args.full
+
+    from . import (
+        bench_efficiency,
+        bench_kernels,
+        bench_nvm_writes,
+        bench_persist_overhead,
+        bench_recomputability,
+        bench_roofline,
+        bench_selection,
+    )
+
+    benches = [
+        ("recomputability", bench_recomputability.run),
+        ("selection", bench_selection.run),
+        ("persist_overhead", bench_persist_overhead.run),
+        ("nvm_writes", bench_nvm_writes.run),
+        ("efficiency", bench_efficiency.run),
+        ("kernels", bench_kernels.run),
+        ("roofline", bench_roofline.run),
+    ]
+    failed = []
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            fn(fast=fast)
+            print(f"[{name}] done in {time.time()-t0:.0f}s")
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"\nFAILED benches: {failed}")
+        sys.exit(1)
+    print("\nall benches complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Crash campaign on LM *training* (the paper's technique applied to the
+architecture zoo): characterize recomputability of Adam-trained transformer
+state, select critical data objects, and show that parameters are critical
+while optimizer moments re-warm.
+
+Usage:  PYTHONPATH=src python examples/crash_campaign.py [--arch rwkv6-3b]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import CacheConfig, CrashTester, PersistPlan
+from repro.core.selection import select_objects
+from repro.models.train_app import LMTrainApp
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--tests", type=int, default=30)
+    ap.add_argument("--iters", type=int, default=30)
+    ap.add_argument("--loss-band", type=float, default=1.01)
+    args = ap.parse_args()
+
+    app = LMTrainApp(base=get_arch(args.arch), n_iters=args.iters,
+                     loss_band=args.loss_band)
+    state = app.init(0)
+    ws_blocks = sum(v.nbytes // 64 for v in state.values())
+    cache = CacheConfig(capacity_blocks=int(ws_blocks * 0.5))
+    print(f"arch={args.arch} (reduced) params={state['params'].size:,} floats; "
+          f"cache={cache.capacity_blocks} blocks of {ws_blocks}")
+
+    base = CrashTester(app, PersistPlan.none(), cache, seed=0).run_campaign(args.tests)
+    print(f"\nbaseline (no persistence): {base.class_fractions()}")
+    print("per-object inconsistency -> recompute correlation (paper §5.1):")
+    for s in select_objects(base, [c for c in app.candidates if c != "k"]):
+        flag = " <- critical" if s.critical else ""
+        print(f"  {s.name:8s} Rs={s.rs:+.3f} p={s.p_value:.1e}{flag}")
+    mean_inc = {
+        o: float(np.mean([r.inconsistency.get(o, 0) for r in base.records]))
+        for o in ("params", "mu", "nu")
+    }
+    print("mean inconsistency rates:", {k: round(v, 3) for k, v in mean_inc.items()})
+
+    ec = CrashTester(app, PersistPlan.at_loop_end(("params",), app), cache,
+                     seed=0).run_campaign(args.tests)
+    print(f"\npersist params at loop end: {ec.class_fractions()}")
+    print(f"recomputability {base.recomputability:.0%} -> {ec.recomputability:.0%}")
+    print("\ntakeaway: SGD/Adam training is a naturally-resilient iterative "
+          "method (paper §2.2) — block-stale parameters act as a bounded "
+          "perturbation the optimizer absorbs; moments re-warm in a few steps.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Serving with EasyCrash cache persistence: batched decode, a mid-stream
+crash, and session resumption without re-prefill.
+
+Usage:  PYTHONPATH=src python examples/serve_recovery.py
+"""
+import os
+import shutil
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+
+def main() -> None:
+    workdir = "/tmp/repro_example_serve"
+    shutil.rmtree(workdir, ignore_errors=True)
+    serve_main([
+        "--arch", "stablelm-1.6b",
+        "--width", "128",
+        "--prompts", "4",
+        "--prompt-len", "32",
+        "--decode-steps", "48",
+        "--flush-every", "4",
+        "--workdir", workdir,
+        "--inject-failure-at", "24",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from .manager import CheckpointConfig, CheckpointManager
+from .serialization import load_pytree, save_pytree
+from .reshard import reshard_restore
+
+__all__ = [
+    "CheckpointConfig", "CheckpointManager", "load_pytree", "save_pytree",
+    "reshard_restore",
+]

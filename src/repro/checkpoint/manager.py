@@ -1,0 +1,124 @@
+"""Multilevel asynchronous checkpoint manager.
+
+Two tiers (paper §7 assumes exactly this):
+
+* **local** — fast tier (node-local SSD / burst buffer): written
+  synchronously-cheap via a background thread, committed atomically by
+  directory rename;
+* **remote** — slow tier (parallel FS): the local checkpoint is *drained*
+  to the remote tier asynchronously, off the critical path.
+
+Retention keeps the newest ``keep`` checkpoints per tier.  ``restore()``
+prefers the newest complete local checkpoint and falls back to remote —
+together with the EasyCrash arena this forms the three-level recovery
+hierarchy: arena (NVM) -> local checkpoint -> remote checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+from .serialization import load_pytree, save_pytree
+
+
+@dataclass(frozen=True)
+class CheckpointConfig:
+    local_dir: str
+    remote_dir: Optional[str] = None
+    keep: int = 2
+    async_drain: bool = True
+
+
+class CheckpointManager:
+    def __init__(self, cfg: CheckpointConfig):
+        self.cfg = cfg
+        os.makedirs(cfg.local_dir, exist_ok=True)
+        if cfg.remote_dir:
+            os.makedirs(cfg.remote_dir, exist_ok=True)
+        self._drain_thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def _step_dir(self, root: str, step: int) -> str:
+        return os.path.join(root, f"step_{step:010d}")
+
+    def save(self, step: int, tree: Any, block: bool = False) -> str:
+        """Write a checkpoint to the local tier; drain to remote async."""
+        final = self._step_dir(self.cfg.local_dir, step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        save_pytree(tree, tmp)
+        os.replace(tmp, final)  # atomic commit
+        self._gc(self.cfg.local_dir)
+        if self.cfg.remote_dir:
+            if self.cfg.async_drain and not block:
+                self._wait_drain()
+                self._drain_thread = threading.Thread(
+                    target=self._drain, args=(step,), daemon=True
+                )
+                self._drain_thread.start()
+            else:
+                self._drain(step)
+        return final
+
+    def _drain(self, step: int) -> None:
+        src = self._step_dir(self.cfg.local_dir, step)
+        dst = self._step_dir(self.cfg.remote_dir, step)  # type: ignore[arg-type]
+        tmp = dst + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        if not os.path.exists(src):
+            return
+        shutil.copytree(src, tmp)
+        os.replace(tmp, dst)
+        self._gc(self.cfg.remote_dir)  # type: ignore[arg-type]
+
+    def _wait_drain(self) -> None:
+        if self._drain_thread is not None:
+            self._drain_thread.join()
+            self._drain_thread = None
+
+    def _gc(self, root: str) -> None:
+        steps = self.list_steps(root)
+        for s in steps[: -self.cfg.keep]:
+            shutil.rmtree(self._step_dir(root, s), ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    @staticmethod
+    def list_steps(root: str) -> List[int]:
+        if not os.path.isdir(root):
+            return []
+        out = []
+        for d in os.listdir(root):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(root, d, "manifest.json")):
+                    out.append(int(d[len("step_"):]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        local = self.list_steps(self.cfg.local_dir)
+        remote = self.list_steps(self.cfg.remote_dir) if self.cfg.remote_dir else []
+        allsteps = sorted(set(local) | set(remote))
+        return allsteps[-1] if allsteps else None
+
+    def restore(self, step: Optional[int] = None) -> Optional[Tuple[int, Any]]:
+        """Newest (or given) checkpoint; local tier preferred."""
+        self._wait_drain()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                return None
+        for root in (self.cfg.local_dir, self.cfg.remote_dir):
+            if not root:
+                continue
+            d = self._step_dir(root, step)
+            if os.path.exists(os.path.join(d, "manifest.json")):
+                return step, load_pytree(d)
+        return None
+
+    def close(self) -> None:
+        self._wait_drain()

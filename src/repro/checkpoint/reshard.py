@@ -1,0 +1,38 @@
+"""Elastic restore: load a mesh-agnostic checkpoint onto any mesh.
+
+Checkpoints store logical (unsharded) arrays, so resharding is just
+``jax.device_put`` with the *target* mesh's NamedShardings.  This is the
+elastic-scaling path: a run checkpointed on N hosts restores onto M hosts
+with a different mesh shape, as long as the logical shapes still divide
+(GSPMD pads when they don't).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from ..distributed.sharding import get_rules
+
+
+def reshard_restore(tree: Any, spec_tree: Any, mesh: Mesh) -> Any:
+    """Place a host-memory pytree onto ``mesh`` per logical spec tree.
+
+    ``spec_tree`` mirrors ``tree`` with tuples of logical axis names (the
+    same trees the model exposes via ``param_specs``/``cache_specs``).
+    """
+    rules = get_rules()
+
+    def place(leaf, spec):
+        if spec is None:
+            spec = ()
+        pspec = rules.resolve(mesh.axis_names, *spec)
+        arr = np.asarray(leaf)
+        return jax.device_put(arr, NamedSharding(mesh, pspec))
+
+    return jax.tree.map(
+        place, tree, spec_tree,
+        is_leaf=lambda x: not isinstance(x, dict),
+    )

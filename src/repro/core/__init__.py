@@ -1,0 +1,41 @@
+"""EasyCrash core: the paper's contribution as a composable library.
+
+Emulation/characterization layer (paper §3–5):
+  blocks, arena, cache_sim, regions, crash_tester, selection, workflow
+Production layer (paper §5.3 step 4 + §7):
+  manager (flush runtime), efficiency (system model)
+"""
+from .arena import NVMArena, WriteStats
+from .blocks import (
+    DEFAULT_BLOCK_BYTES,
+    block_diff_mask,
+    inconsistent_rate,
+    mix_blocks,
+    num_blocks,
+)
+from .cache_sim import CacheConfig, Flush, RegionEvents, Sweep, simulate_window
+from .crash_tester import CampaignResult, CrashRecord, CrashTester, PersistPlan
+from .efficiency import (
+    SystemConfig,
+    efficiency_with,
+    efficiency_without,
+    scale_mtbf,
+    tau_threshold,
+    young_interval,
+)
+from .manager import EasyCrashManager, FlushPolicy, flatten_state, unflatten_state
+from .regions import IterativeApp, Region, State, VerifyResult
+from .selection import select_objects, select_regions, spearman
+from .workflow import WorkflowResult, run_workflow
+
+__all__ = [
+    "NVMArena", "WriteStats", "DEFAULT_BLOCK_BYTES", "block_diff_mask",
+    "inconsistent_rate", "mix_blocks", "num_blocks", "CacheConfig", "Flush",
+    "RegionEvents", "Sweep", "simulate_window", "CampaignResult",
+    "CrashRecord", "CrashTester", "PersistPlan", "SystemConfig",
+    "efficiency_with", "efficiency_without", "scale_mtbf", "tau_threshold",
+    "young_interval", "EasyCrashManager", "FlushPolicy", "flatten_state",
+    "unflatten_state", "IterativeApp", "Region", "State", "VerifyResult",
+    "select_objects", "select_regions", "spearman", "WorkflowResult",
+    "run_workflow",
+]

@@ -1,0 +1,317 @@
+"""NVCT cache model: write-back LRU cache between the app and the NVM arena.
+
+The paper's NVCT tool is a PIN-based cache simulator that tracks, at
+cache-block granularity, which values have reached NVM and which are dirty in
+the (volatile) cache when a random crash fires.  We reproduce it with an
+event-driven simulation:
+
+* an application iteration is a sequence of *regions*; each region performs
+  ordered read/write **sweeps** over its declared data objects (HPC solver
+  loops and XLA fusions write arrays in sweep order);
+* a fully-associative write-back, write-allocate LRU cache of
+  ``capacity_blocks`` sits in front of NVM.  Dirty blocks reach NVM when
+  evicted (natural write-back) or when an EasyCrash flush (CLWB semantics:
+  write back, stay resident, become clean) targets their object;
+* a crash at access-time ``W`` loses every dirty block still resident; the
+  NVM image is the per-block mixture of the latest written-back versions.
+
+Efficiency: a *crash window* (the two iterations around the crash point) is
+simulated **once**, producing timestamped write-back records; every crash
+test inside the window is then resolved vectorially from the records.  The
+window is assumed to start cache-consistent, which is exact whenever an
+iteration touches more blocks than the cache holds (the paper selects inputs
+so the footprint exceeds the LLC; small-footprint apps are explicitly
+EasyCrash-unsuitable, §8).  ``tests/test_cache_sim.py`` cross-checks the
+record machinery against a brute-force simulator with hypothesis.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .blocks import DEFAULT_BLOCK_BYTES
+
+
+@dataclass(frozen=True)
+class CacheConfig:
+    capacity_blocks: int = 2048
+    block_bytes: int = DEFAULT_BLOCK_BYTES
+
+
+# --------------------------------------------------------------------- events
+@dataclass(frozen=True)
+class Sweep:
+    """Sequential pass over all blocks of ``obj``; write sweeps dirty them.
+
+    ``hot``: objects re-read continuously while this sweep runs (e.g. the
+    centroid table during a k-means assign pass).  Their blocks are
+    re-accessed every ``hot_every`` accesses, so the LRU never ages them out
+    — which is how small hot objects become *chronically dirty* and leave
+    only ancient values in NVM (paper §8).
+    """
+
+    obj: str
+    write: bool
+    hot: Tuple[str, ...] = ()
+    hot_every: int = 16
+
+
+@dataclass(frozen=True)
+class Flush:
+    """EasyCrash persistence op on ``obj`` (CLWB: write back + keep + clean)."""
+
+    obj: str
+
+
+Event = object  # Sweep | Flush
+
+
+@dataclass(frozen=True)
+class RegionEvents:
+    """One region occurrence inside a window."""
+
+    seq: int            # global sequence number of this region occurrence
+    iter_idx: int       # application iteration it belongs to
+    region_idx: int     # index into the app's region list
+    events: Tuple[Event, ...]
+
+
+@dataclass
+class SweepRecord:
+    t_start: int
+    obj: str
+    seq: int
+    n_blocks: int
+
+
+@dataclass
+class WindowTrace:
+    """Everything a crash test needs, produced by one window simulation."""
+
+    obj_blocks: Dict[str, int]
+    # write-back records per object: arrays sorted by time
+    wb_t: Dict[str, np.ndarray]
+    wb_block: Dict[str, np.ndarray]
+    wb_seq: Dict[str, np.ndarray]
+    # write sweeps in time order (for live-value reconstruction)
+    sweeps: List[SweepRecord]
+    # region spans: (seq, iter_idx, region_idx, t0, t1)
+    spans: List[Tuple[int, int, int, int, int]]
+    t_end: int
+    # write accounting over the window
+    eviction_writes: int = 0
+    flush_writes: int = 0
+    flushed_clean_blocks: int = 0
+    flush_ops: int = 0
+
+    def span_for_time(self, t: int) -> Tuple[int, int, int, int, int]:
+        for span in self.spans:
+            if span[3] <= t < span[4]:
+                return span
+        return self.spans[-1]
+
+
+class _LRU:
+    """Exact fully-associative LRU write-back cache at block granularity."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        # (obj, block) -> writer seq (or -1 if clean)
+        self._lines: "OrderedDict[Tuple[str, int], int]" = OrderedDict()
+
+    def access(self, key: Tuple[str, int], writer_seq: int) -> Optional[Tuple[str, int, int]]:
+        """Access one block; returns an eviction record (obj, block, seq) or None.
+
+        ``writer_seq >= 0`` marks a write (dirties the line); ``-1`` is a read.
+        """
+        lines = self._lines
+        prev = lines.pop(key, None)
+        if prev is None and len(lines) >= self.capacity:
+            evk, evseq = lines.popitem(last=False)
+            evicted = (evk[0], evk[1], evseq) if evseq >= 0 else None
+        else:
+            evicted = None
+        if writer_seq >= 0:
+            lines[key] = writer_seq
+        else:
+            lines[key] = prev if prev is not None and prev >= 0 else -1
+        return evicted
+
+    def dirty_lines_of(self, obj: str) -> List[Tuple[int, int]]:
+        return [(blk, seq) for (o, blk), seq in self._lines.items() if o == obj and seq >= 0]
+
+    def clean_obj(self, obj: str) -> None:
+        for k in list(self._lines.keys()):
+            if k[0] == obj and self._lines[k] >= 0:
+                self._lines[k] = -1
+
+    def dirty_resident_mask(self, obj: str, n_blocks: int) -> np.ndarray:
+        m = np.zeros(n_blocks, dtype=bool)
+        for (o, blk), seq in self._lines.items():
+            if o == obj and seq >= 0:
+                m[blk] = True
+        return m
+
+
+def simulate_window(
+    cfg: CacheConfig,
+    obj_blocks: Mapping[str, int],
+    regions: Sequence[RegionEvents],
+) -> WindowTrace:
+    """Run the event trace once; emit timestamped write-back records.
+
+    Time advances by one unit per block access.  Flushes are instantaneous
+    (they do not advance time) — the paper measures flush cost separately.
+    """
+    cache = _LRU(cfg.capacity_blocks)
+    wb: Dict[str, List[Tuple[int, int, int]]] = {o: [] for o in obj_blocks}
+    sweeps: List[SweepRecord] = []
+    spans: List[Tuple[int, int, int, int, int]] = []
+    trace = WindowTrace(
+        obj_blocks=dict(obj_blocks),
+        wb_t={}, wb_block={}, wb_seq={}, sweeps=sweeps, spans=spans, t_end=0,
+    )
+    t = 0
+    for reg in regions:
+        t0 = t
+        for ev in reg.events:
+            if isinstance(ev, Sweep):
+                nb = obj_blocks[ev.obj]
+                if ev.write:
+                    sweeps.append(SweepRecord(t, ev.obj, reg.seq, nb))
+                writer = reg.seq if ev.write else -1
+                for b in range(nb):
+                    evicted = cache.access((ev.obj, b), writer)
+                    if evicted is not None:
+                        eo, eb, eseq = evicted
+                        wb[eo].append((t, eb, eseq))
+                        trace.eviction_writes += 1
+                    t += 1
+                    if ev.hot and b % ev.hot_every == ev.hot_every - 1:
+                        # refresh hot objects (reads; no time advance — they
+                        # hit in L1 and cost nothing on the sweep timescale)
+                        for h in ev.hot:
+                            for hb in range(obj_blocks[h]):
+                                ev2 = cache.access((h, hb), -1)
+                                if ev2 is not None:
+                                    eo, eb, eseq = ev2
+                                    wb[eo].append((t, eb, eseq))
+                                    trace.eviction_writes += 1
+            elif isinstance(ev, Flush):
+                dirty = cache.dirty_lines_of(ev.obj)
+                nb = obj_blocks[ev.obj]
+                for blk, seq in dirty:
+                    wb[ev.obj].append((t, blk, seq))
+                trace.flush_writes += len(dirty)
+                trace.flushed_clean_blocks += nb - len(dirty)
+                trace.flush_ops += 1
+                cache.clean_obj(ev.obj)
+            else:  # pragma: no cover - defensive
+                raise TypeError(f"unknown event {ev!r}")
+        spans.append((reg.seq, reg.iter_idx, reg.region_idx, t0, t))
+    trace.t_end = t
+    for o, recs in wb.items():
+        if recs:
+            arr = np.asarray(recs, dtype=np.int64)
+            order = np.argsort(arr[:, 0], kind="stable")
+            arr = arr[order]
+            trace.wb_t[o] = arr[:, 0]
+            trace.wb_block[o] = arr[:, 1]
+            trace.wb_seq[o] = arr[:, 2]
+        else:
+            trace.wb_t[o] = np.zeros(0, dtype=np.int64)
+            trace.wb_block[o] = np.zeros(0, dtype=np.int64)
+            trace.wb_seq[o] = np.zeros(0, dtype=np.int64)
+    return trace
+
+
+def _apply_versions(
+    base: np.ndarray,
+    blocks: np.ndarray,
+    seqs: np.ndarray,
+    versions: Mapping[int, np.ndarray],
+    block_bytes: int,
+) -> np.ndarray:
+    """Overwrite ``base`` blockwise with versioned values, in record order."""
+    out = np.ascontiguousarray(base).copy()
+    flat = out.view(np.uint8).reshape(-1)
+    nbytes = flat.size
+    for blk, seq in zip(blocks.tolist(), seqs.tolist()):
+        src = versions[seq]
+        sflat = np.ascontiguousarray(src).view(np.uint8).reshape(-1)
+        lo = blk * block_bytes
+        hi = min(lo + block_bytes, nbytes)
+        flat[lo:hi] = sflat[lo:hi]
+    return flat.view(base.dtype).reshape(base.shape)
+
+
+def resolve_nvm_image(
+    trace: WindowTrace,
+    crash_t: int,
+    start_values: Mapping[str, np.ndarray],
+    seq_values: Mapping[int, Mapping[str, np.ndarray]],
+    block_bytes: int,
+    chronic_base: Optional[Mapping[str, np.ndarray]] = None,
+) -> Dict[str, np.ndarray]:
+    """NVM image at ``crash_t``: latest written-back version per block.
+
+    ``chronic_base``: for objects re-dirtied every iteration, blocks with *no*
+    write-back anywhere in the window were — by steady-state periodicity —
+    never written back since the value in ``chronic_base`` (the last flush,
+    or initialization).  This captures the paper's §8 small-hot-object case:
+    data resident in cache forever leaves only ancient values in NVM.
+    """
+    from .blocks import mix_blocks, obj_num_blocks
+
+    out: Dict[str, np.ndarray] = {}
+    for obj, base in start_values.items():
+        base = np.asarray(base)
+        if chronic_base is not None and obj in chronic_base:
+            nb = obj_num_blocks(base, block_bytes)
+            chronic_mask = np.ones(nb, dtype=bool)
+            if trace.wb_block[obj].size:
+                seen = np.unique(trace.wb_block[obj])
+                chronic_mask[seen[seen < nb]] = False
+            if chronic_mask.any():
+                base = mix_blocks(chronic_base[obj], base, ~chronic_mask, block_bytes)
+        t = trace.wb_t[obj]
+        n = int(np.searchsorted(t, crash_t, side="right"))
+        if n == 0:
+            out[obj] = np.array(base, copy=True)
+            continue
+        needed = set(trace.wb_seq[obj][:n].tolist())
+        versions = {seq: seq_values[seq][obj] for seq in needed}
+        out[obj] = _apply_versions(
+            base, trace.wb_block[obj][:n], trace.wb_seq[obj][:n], versions, block_bytes
+        )
+    return out
+
+
+def resolve_live_values(
+    trace: WindowTrace,
+    crash_t: int,
+    start_values: Mapping[str, np.ndarray],
+    seq_values: Mapping[int, Mapping[str, np.ndarray]],
+    block_bytes: int,
+) -> Dict[str, np.ndarray]:
+    """True (cache-inclusive) values at ``crash_t``: all writes applied,
+    the in-flight sweep applied partially."""
+    out = {o: np.array(v, copy=True) for o, v in start_values.items()}
+    for sw in trace.sweeps:
+        if sw.t_start >= crash_t:
+            break
+        if sw.obj not in out:
+            continue
+        done = min(sw.n_blocks, crash_t - sw.t_start)
+        if done <= 0:
+            continue
+        base = out[sw.obj]
+        flat = np.ascontiguousarray(base).copy().view(np.uint8).reshape(-1)
+        src = np.ascontiguousarray(seq_values[sw.seq][sw.obj]).view(np.uint8).reshape(-1)
+        hi = min(done * block_bytes, flat.size)
+        flat[:hi] = src[:hi]
+        out[sw.obj] = flat.view(base.dtype).reshape(base.shape)
+    return out

@@ -1,0 +1,361 @@
+"""NVCT: crash-test campaigns for application recomputability (paper §3–4).
+
+A campaign repeatedly: picks a uniformly random crash point, synthesises the
+post-crash NVM image through the cache model (:mod:`repro.core.cache_sim`),
+restarts the application from the image, runs it to completion and classifies
+the outcome:
+
+* **S1** — passes acceptance verification with no extra iterations
+  (the paper's definition of *successful recomputation*);
+* **S2** — passes, but needed extra iterations;
+* **S3** — interruption (exception / non-finite blow-up during recompute);
+* **S4** — verification still fails after 2x the original iteration budget.
+
+Recomputability = |S1| / |tests| (paper §2.2).  Each record also carries the
+per-object data-inconsistency rate, which feeds the Spearman selection
+(:mod:`repro.core.selection`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .blocks import inconsistent_rate
+from .cache_sim import (
+    CacheConfig,
+    Flush,
+    RegionEvents,
+    Sweep,
+    WindowTrace,
+    resolve_live_values,
+    resolve_nvm_image,
+    simulate_window,
+)
+from .regions import IterativeApp, Region, State, VerifyResult, object_blocks
+
+
+@dataclass(frozen=True)
+class PersistPlan:
+    """Which objects to flush, where, and how often.
+
+    ``region_freq[k] = x`` flushes the plan's objects at the end of region
+    ``k`` on iterations where ``iter_idx % x == 0`` (frequency interpolation
+    of Eq. 5).  An empty ``region_freq`` means no EasyCrash flushes at all.
+    """
+
+    objects: Tuple[str, ...] = ()
+    region_freq: Mapping[int, int] = field(default_factory=dict)
+
+    @staticmethod
+    def none() -> "PersistPlan":
+        return PersistPlan((), {})
+
+    @staticmethod
+    def at_loop_end(objects: Sequence[str], app: IterativeApp, x: int = 1) -> "PersistPlan":
+        """Persist at the end of each main-loop iteration (paper Fig 2a)."""
+        last = len(app.regions()) - 1
+        return PersistPlan(tuple(objects), {last: x})
+
+    @staticmethod
+    def best(objects: Sequence[str], app: IterativeApp) -> "PersistPlan":
+        """Persist at every region, every iteration (paper's costly upper bound)."""
+        return PersistPlan(tuple(objects), {k: 1 for k in range(len(app.regions()))})
+
+
+@dataclass
+class CrashRecord:
+    iter_idx: int
+    region_idx: int
+    frac: float
+    inconsistency: Dict[str, float]
+    outcome: str          # "S1" | "S2" | "S3" | "S4"
+    extra_iters: int
+    verify_metric: float
+
+
+@dataclass
+class CampaignResult:
+    app_name: str
+    plan: PersistPlan
+    records: List[CrashRecord]
+    golden_iters: int
+    window_write_stats: Dict[str, float]
+
+    @property
+    def n(self) -> int:
+        return len(self.records)
+
+    def class_fractions(self) -> Dict[str, float]:
+        out = {c: 0.0 for c in ("S1", "S2", "S3", "S4")}
+        for r in self.records:
+            out[r.outcome] += 1
+        return {c: v / max(1, self.n) for c, v in out.items()}
+
+    @property
+    def recomputability(self) -> float:
+        return self.class_fractions()["S1"]
+
+    def per_region_recomputability(self) -> Dict[int, Tuple[float, int]]:
+        """region_idx -> (recomputability c_k, sample count)."""
+        groups: Dict[int, List[CrashRecord]] = {}
+        for r in self.records:
+            groups.setdefault(r.region_idx, []).append(r)
+        return {
+            k: (sum(1 for r in v if r.outcome == "S1") / len(v), len(v))
+            for k, v in groups.items()
+        }
+
+    def vectors_for_selection(self, obj: str) -> Tuple[np.ndarray, np.ndarray]:
+        """(inconsistency rates, success indicator) for Spearman analysis."""
+        x = np.array([r.inconsistency.get(obj, 0.0) for r in self.records])
+        y = np.array([1.0 if r.outcome == "S1" else 0.0 for r in self.records])
+        return x, y
+
+
+class CrashTester:
+    """NVCT driver bound to one application and one persist plan."""
+
+    def __init__(
+        self,
+        app: IterativeApp,
+        plan: PersistPlan,
+        cache: CacheConfig = CacheConfig(),
+        seed: int = 0,
+        max_extra_factor: float = 2.0,
+    ):
+        self.app = app
+        self.plan = plan
+        self.cache = cache
+        self.seed = seed
+        self.max_extra_factor = max_extra_factor
+        self._golden_states: Optional[List[State]] = None
+        self._golden_iters: int = 0
+        self._golden_final: Optional[State] = None
+        self._window_cache: Dict[int, Tuple[WindowTrace, Dict[int, Dict[str, np.ndarray]], int]] = {}
+
+    # ---------------------------------------------------------------- golden
+    def _ensure_golden(self) -> None:
+        if self._golden_states is not None:
+            return
+        app = self.app
+        state = app.init(self.seed)
+        states = [
+            {k: np.array(v, copy=True) for k, v in state.items()}
+        ]
+        it = 0
+        while it < app.n_iters:
+            state = app.run_iteration(state)
+            it += 1
+            states.append({k: np.array(v, copy=True) for k, v in state.items()})
+            if app.converged(state, it):
+                break
+        self._golden_states = states
+        self._golden_iters = it
+        self._golden_final = state
+        golden_verify = app.verify(state)
+        if not golden_verify.passed:
+            raise RuntimeError(
+                f"golden run of {app.name} fails its own acceptance verification: "
+                f"{golden_verify}"
+            )
+
+    @property
+    def golden_iters(self) -> int:
+        self._ensure_golden()
+        return self._golden_iters
+
+    # ---------------------------------------------------------------- events
+    def _tracked_objects(self, state: State) -> List[str]:
+        regs = self.app.regions()
+        names: List[str] = []
+        for r in regs:
+            for o in tuple(r.reads) + tuple(r.writes):
+                if o not in names and o in state:
+                    names.append(o)
+        return names
+
+    def _region_events(self, region: Region, region_idx: int, iter_idx: int) -> List[object]:
+        events: List[object] = []
+        hot = tuple(region.hot_reads)
+        for o in region.reads:
+            if o in hot:
+                continue  # hot objects ride along with the big sweeps
+            events.append(Sweep(o, write=False, hot=hot))
+        for o in region.writes:
+            events.append(Sweep(o, write=True, hot=hot))
+        x = self.plan.region_freq.get(region_idx)
+        if x and iter_idx % x == 0:
+            for o in self.plan.objects:
+                events.append(Flush(o))
+        return events
+
+    def _simulate_crash_window(
+        self, crash_iter: int
+    ) -> Tuple[WindowTrace, Dict[int, Dict[str, np.ndarray]], int]:
+        """Simulate iterations [crash_iter-1, crash_iter] once; cache result."""
+        if crash_iter in self._window_cache:
+            return self._window_cache[crash_iter]
+        self._ensure_golden()
+        app = self.app
+        regs = app.regions()
+        first = max(0, crash_iter - 1)
+        state = {k: np.array(v, copy=True) for k, v in self._golden_states[first].items()}
+        tracked = self._tracked_objects(state)
+        obj_blocks = object_blocks(state, tracked, self.cache.block_bytes)
+
+        region_events: List[RegionEvents] = []
+        seq_values: Dict[int, Dict[str, np.ndarray]] = {}
+        seq = 0
+        for it in range(first, crash_iter + 1):
+            for ridx, region in enumerate(regs):
+                state = region.fn(state)
+                seq_values[seq] = {
+                    o: np.array(state[o], copy=True) for o in region.writes if o in state
+                }
+                region_events.append(
+                    RegionEvents(
+                        seq=seq,
+                        iter_idx=it,
+                        region_idx=ridx,
+                        events=tuple(self._region_events(region, ridx, it)),
+                    )
+                )
+                seq += 1
+        trace = simulate_window(self.cache, obj_blocks, region_events)
+        # crash times are drawn from the *last* iteration of the window
+        crash_span_start = next(t0 for (s, it, ridx, t0, t1) in trace.spans if it == crash_iter)
+        result = (trace, seq_values, crash_span_start)
+        self._window_cache[crash_iter] = result
+        return result
+
+    # ----------------------------------------------------------------- tests
+    def run_one(self, rng: np.random.Generator) -> CrashRecord:
+        self._ensure_golden()
+        app = self.app
+        golden_iters = self._golden_iters
+        crash_iter = int(rng.integers(0, golden_iters))
+        trace, seq_values, t_lo = self._simulate_crash_window(crash_iter)
+        crash_t = int(rng.integers(t_lo, trace.t_end))
+        seq, it, region_idx, t0, t1 = trace.span_for_time(crash_t)
+        frac = (crash_t - t0) / max(1, (t1 - t0))
+
+        first = max(0, crash_iter - 1)
+        start_values = {
+            o: self._golden_states[first][o]
+            for o in trace.obj_blocks
+            if o in self._golden_states[first]
+        }
+        candidates = [o for o in app.candidates if o in start_values]
+        chronic = self._chronic_base(candidates, crash_iter) if crash_iter >= 1 else None
+        nvm = resolve_nvm_image(
+            trace, crash_t,
+            {o: start_values[o] for o in candidates},
+            seq_values, self.cache.block_bytes,
+            chronic_base=chronic,
+        )
+        live = resolve_live_values(
+            trace, crash_t,
+            {o: start_values[o] for o in candidates},
+            seq_values, self.cache.block_bytes,
+        )
+        inconsistency = {o: inconsistent_rate(nvm[o], live[o]) for o in candidates}
+
+        # All candidates restart from the NVM image (paper §5.1: "the
+        # candidates are directly read from NVM"); the plan only controls
+        # which get *flushed* (and therefore how consistent they are).  The
+        # loop iterator is always flushed at iteration end (paper fn. 3), so
+        # its NVM value is the bookmarked restart iteration, not the torn
+        # cache-model value.
+        persisted = dict(nvm)
+        if app.iterator_object and app.iterator_object in persisted:
+            bookmark = np.asarray(persisted[app.iterator_object])
+            persisted[app.iterator_object] = np.full_like(bookmark, crash_iter)
+        outcome, extra, metric = self._restart_and_classify(persisted, crash_iter)
+        return CrashRecord(
+            iter_idx=crash_iter,
+            region_idx=region_idx,
+            frac=float(frac),
+            inconsistency=inconsistency,
+            outcome=outcome,
+            extra_iters=extra,
+            verify_metric=metric,
+        )
+
+    def _chronic_base(self, candidates, crash_iter: int) -> Dict[str, np.ndarray]:
+        """Steady-state base values for chronically-cached blocks: the last
+        flushed image if the plan ever flushes the object, else the initial
+        value (paper §8: small hot objects leave only ancient data in NVM)."""
+        app = self.app
+        regs = app.regions()
+        written = set()
+        for r in regs:
+            written.update(r.writes)
+        out: Dict[str, np.ndarray] = {}
+        for o in candidates:
+            if o not in written:
+                continue
+            flushed_iters = []
+            if o in self.plan.objects:
+                for k, x in self.plan.region_freq.items():
+                    if x:
+                        cand = ((crash_iter - 1) // x) * x
+                        if cand >= 0:
+                            flushed_iters.append(cand)
+            if flushed_iters:
+                f = max(flushed_iters)
+                out[o] = self._golden_states[min(f + 1, len(self._golden_states) - 1)][o]
+            else:
+                out[o] = self._golden_states[0][o]
+        return out
+
+    def _restart_and_classify(
+        self, persisted: Mapping[str, np.ndarray], restart_iter: int
+    ) -> Tuple[str, int, float]:
+        app = self.app
+        golden_iters = self._golden_iters
+        budget = int(self.max_extra_factor * golden_iters)
+        try:
+            state = app.restart_init(self.seed, persisted)
+            state, executed = app.run_to_completion(state, restart_iter, golden_iters)
+            res = app.verify(state)
+            if res.passed:
+                return "S1", 0, res.metric
+            extra = 0
+            it = restart_iter + executed
+            while it < budget:
+                state = app.run_iteration(state)
+                it += 1
+                extra += 1
+                res = app.verify(state)
+                if res.passed:
+                    return "S2", extra, res.metric
+            return "S4", extra, res.metric
+        except FloatingPointError:
+            return "S3", 0, float("nan")
+        except Exception:
+            return "S3", 0, float("nan")
+
+    def run_campaign(self, n_tests: int, seed: Optional[int] = None) -> CampaignResult:
+        rng = np.random.default_rng(self.seed if seed is None else seed)
+        records = [self.run_one(rng) for _ in range(n_tests)]
+        # steady-state write accounting from the last simulated window
+        stats: Dict[str, float] = {}
+        if self._window_cache:
+            trace, _, _ = next(iter(self._window_cache.values()))
+            n_iters_in_window = 2
+            stats = {
+                "eviction_writes_per_iter": trace.eviction_writes / n_iters_in_window,
+                "flush_writes_per_iter": trace.flush_writes / n_iters_in_window,
+                "flushed_clean_per_iter": trace.flushed_clean_blocks / n_iters_in_window,
+                "flush_ops_per_iter": trace.flush_ops / n_iters_in_window,
+            }
+        return CampaignResult(
+            app_name=self.app.name,
+            plan=self.plan,
+            records=records,
+            golden_iters=self._golden_iters,
+            window_write_stats=stats,
+        )

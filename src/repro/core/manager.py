@@ -1,0 +1,244 @@
+"""EasyCrash production runtime for distributed training loops.
+
+This is the framework-facing layer: given a train-state pytree and a
+:class:`PersistPlan`-style policy, the manager
+
+* flushes the plan's state leaves to a host-local :class:`NVMArena`
+  (asynchronously, on a writer thread — a straggling host never blocks the
+  step, and a skipped flush only increases staleness, which EasyCrash
+  tolerates by construction);
+* performs delta flushes: only blocks that changed since the last flush move
+  (CPU stand-in for the ``delta_snapshot`` Pallas kernel);
+* takes full coordinated checkpoints at the Young interval stretched by the
+  measured recomputability (MTBF' = MTBF / (1 - R));
+* on restart, tries the EasyCrash path (arena image + acceptance
+  verification) before falling back to the last full checkpoint.
+
+Every host persists only its own shards: the mechanism is O(local bytes) and
+has zero cross-host traffic, so it scales to arbitrarily many nodes.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .arena import NVMArena
+from .efficiency import young_interval
+
+
+def _cast_like(img: np.ndarray, target: np.ndarray) -> np.ndarray:
+    """Cast a loaded array to the target dtype; np.load round-trips extension
+    dtypes (bfloat16) as raw void bytes, which only ``view`` can recover."""
+    if img.dtype == target.dtype:
+        return img
+    if img.dtype.kind == "V" and img.dtype.itemsize == target.dtype.itemsize:
+        return img.view(target.dtype)
+    return img.astype(target.dtype)
+
+
+def flatten_state(state: Mapping[str, Any], prefix: str = "") -> Dict[str, np.ndarray]:
+    """Flatten a nested dict pytree of arrays into 'a/b/c' -> ndarray."""
+    out: Dict[str, np.ndarray] = {}
+    for k, v in state.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, Mapping):
+            out.update(flatten_state(v, key + "/"))
+        else:
+            out[key] = np.asarray(v)
+    return out
+
+
+def unflatten_state(flat: Mapping[str, np.ndarray]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for k, v in flat.items():
+        parts = k.split("/")
+        d = out
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return out
+
+
+@dataclass
+class FlushPolicy:
+    """Production analogue of :class:`PersistPlan`.
+
+    ``leaves``: state leaves (flat names, prefix match allowed) to persist.
+    ``every_steps``: flush cadence in optimizer steps (the 'frequency x').
+    ``async_flush``: persist on a background thread (drops to sync in tests).
+    ``max_pending``: back-pressure bound; beyond it flushes are *skipped*
+    (bounded staleness instead of a stalled step — straggler mitigation).
+    """
+
+    leaves: Tuple[str, ...]
+    every_steps: int = 1
+    async_flush: bool = True
+    max_pending: int = 2
+
+
+@dataclass
+class ManagerStats:
+    flushes_issued: int = 0
+    flushes_skipped: int = 0
+    blocks_written: int = 0
+    checkpoints_taken: int = 0
+    easycrash_restores: int = 0
+    checkpoint_restores: int = 0
+
+
+class EasyCrashManager:
+    def __init__(
+        self,
+        arena: NVMArena,
+        policy: FlushPolicy,
+        checkpoint_save: Optional[Callable[[int, Mapping[str, Any]], None]] = None,
+        checkpoint_restore: Optional[Callable[[], Optional[Tuple[int, Dict[str, Any]]]]] = None,
+        mtbf: Optional[float] = None,
+        t_chk: Optional[float] = None,
+        recomputability: float = 0.0,
+        step_time: float = 1.0,
+    ):
+        self.arena = arena
+        self.policy = policy
+        self.checkpoint_save = checkpoint_save
+        self.checkpoint_restore = checkpoint_restore
+        self.stats = ManagerStats()
+        self._q: "queue.Queue[Optional[Tuple[int, Dict[str, np.ndarray]]]]" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+        if policy.async_flush:
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+        # checkpoint cadence in *steps*, from Young's formula on the stretched
+        # MTBF (paper §7); None disables periodic checkpoints.
+        self.checkpoint_every: Optional[int] = None
+        if mtbf is not None and t_chk is not None:
+            mtbf_ec = mtbf / max(1e-9, (1.0 - min(recomputability, 0.999999)))
+            self.checkpoint_every = max(1, int(young_interval(t_chk, mtbf_ec) / step_time))
+
+    # ------------------------------------------------------------------ flush
+    @staticmethod
+    def _match(name: str, leaf: str) -> bool:
+        if leaf.endswith("*"):
+            return name.startswith(leaf[:-1])
+        return name == leaf or name.startswith(leaf + "/")
+
+    def _selected(self, flat: Mapping[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        return {
+            name: arr
+            for name, arr in flat.items()
+            if any(self._match(name, l) for l in self.policy.leaves)
+        }
+
+    def maybe_flush(self, step: int, state: Mapping[str, Any]) -> bool:
+        """Issue an EasyCrash persistence op if the cadence says so.
+
+        Returns True if a flush was issued (or enqueued)."""
+        if step % self.policy.every_steps != 0:
+            return False
+        flat = flatten_state(state)
+        sel = self._selected(flat)
+        sel["__step__"] = np.asarray(step, dtype=np.int64)
+        payload = {k: np.array(v, copy=True) for k, v in sel.items()}
+        if self.policy.async_flush:
+            if self._q.qsize() >= self.policy.max_pending:
+                self.stats.flushes_skipped += 1   # straggler mitigation: skip
+                return False
+            self._q.put((step, payload))
+        else:
+            self._flush_now(step, payload)
+        self.stats.flushes_issued += 1
+        return True
+
+    def _flush_now(self, step: int, payload: Mapping[str, np.ndarray]) -> None:
+        for name, arr in payload.items():
+            self.stats.blocks_written += self.arena.flush(name, arr)
+        self.arena.save_manifest()
+
+    def _drain(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            try:
+                self._flush_now(*item)
+            except BaseException as e:  # surfaced on barrier()
+                self._last_error = e
+
+    def barrier(self) -> None:
+        """Wait for all pending flushes (checkpoint/shutdown boundary)."""
+        if self.policy.async_flush:
+            while not self._q.empty():
+                time.sleep(0.001)
+            # one more roundtrip so an in-flight item finishes
+            self._q.put((int(-1), {}))
+            while not self._q.empty():
+                time.sleep(0.001)
+        if self._last_error is not None:
+            raise self._last_error
+
+    def close(self) -> None:
+        if self._worker is not None:
+            self.barrier()
+            self._q.put(None)
+            self._worker.join(timeout=5)
+            self._worker = None
+
+    # ------------------------------------------------------------- checkpoint
+    def maybe_checkpoint(self, step: int, state: Mapping[str, Any]) -> bool:
+        if (
+            self.checkpoint_save is None
+            or self.checkpoint_every is None
+            or step == 0
+            or step % self.checkpoint_every != 0
+        ):
+            return False
+        self.barrier()
+        self.checkpoint_save(step, state)
+        self.stats.checkpoints_taken += 1
+        return True
+
+    # ---------------------------------------------------------------- restore
+    def restore(
+        self,
+        init_state: Mapping[str, Any],
+        verify: Optional[Callable[[Dict[str, Any], int], bool]] = None,
+    ) -> Tuple[Dict[str, Any], int, str]:
+        """Recovery: EasyCrash path first, checkpoint fallback second.
+
+        ``verify(state, step)`` is the acceptance hook deciding whether the
+        NVM image is usable; recomputability-by-construction means it may
+        accept inconsistent-but-convergent images.
+        Returns (state, step, source) with source in
+        {"easycrash", "checkpoint", "fresh"}.
+        """
+        flat_init = flatten_state(init_state)
+        # --- EasyCrash path: arena image over init state
+        names = set(self.arena.names())
+        if "__step__" in names:
+            merged = dict(flat_init)
+            for name in names:
+                if name == "__step__" or name.startswith("__chk__/"):
+                    continue
+                if name in merged:
+                    img = self.arena.get(name)
+                    if img.shape == merged[name].shape:
+                        merged[name] = _cast_like(img, merged[name])
+            step = int(self.arena.get("__step__"))
+            candidate = unflatten_state(merged)
+            if verify is None or verify(candidate, step):
+                self.stats.easycrash_restores += 1
+                return candidate, step, "easycrash"
+        # --- checkpoint fallback
+        if self.checkpoint_restore is not None:
+            got = self.checkpoint_restore()
+            if got is not None:
+                step, state = got
+                self.stats.checkpoint_restores += 1
+                return state, step, "checkpoint"
+        return dict(init_state), 0, "fresh"

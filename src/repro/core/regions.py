@@ -1,0 +1,121 @@
+"""Application abstraction: iterative apps as chains of code regions.
+
+The paper models an HPC application as a main computation loop containing
+first-level inner loops; a *code region* is one inner loop or the straight-
+line code between two of them (§5.2).  Here an app declares its regions
+explicitly: each region is a pure, jittable transition on the app state that
+also declares which data objects it reads and writes (in sweep order), which
+is what drives the NVCT cache model.
+
+State is a flat ``dict[str, np.ndarray]``.  Heap/global data objects whose
+lifetime is the main loop and which are not read-only are the *candidates*
+for critical-object selection (§5.1); everything else is rebuilt by
+``restart_init`` on recovery.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+State = Dict[str, np.ndarray]
+
+
+@dataclass(frozen=True)
+class Region:
+    """One code region of the main loop."""
+
+    name: str
+    fn: Callable[[State], State]
+    writes: Tuple[str, ...]              # objects written, in sweep order
+    reads: Tuple[str, ...] = ()
+    cost: float = 1.0                    # relative execution-time weight (a_k)
+    loop: bool = True                    # has loop structure (flush freq x applies)
+    hot_reads: Tuple[str, ...] = ()      # small objects re-read continuously
+
+
+@dataclass
+class VerifyResult:
+    passed: bool
+    metric: float
+    detail: str = ""
+
+
+class IterativeApp:
+    """Base class for region-structured iterative applications."""
+
+    name: str = "app"
+    n_iters: int = 10
+    #: candidates of critical data objects (non-read-only, main-loop lifetime)
+    candidates: Tuple[str, ...] = ()
+    #: the loop iterator object; always persisted at iteration end (paper
+    #: footnote 3: "we always persist a loop iterator to bookmark where the
+    #: crash happens ... almost zero impact on performance")
+    iterator_object: Optional[str] = "k"
+
+    def regions(self) -> Tuple[Region, ...]:
+        raise NotImplementedError
+
+    def init(self, seed: int = 0) -> State:
+        raise NotImplementedError
+
+    def restart_init(self, seed: int, persisted: Mapping[str, np.ndarray]) -> State:
+        """Rebuild a runnable state from the (possibly inconsistent) NVM image.
+
+        Default: re-run ``init`` (restores temporaries / read-only objects)
+        then overwrite candidates with their persisted images.
+        """
+        state = self.init(seed)
+        for k, v in persisted.items():
+            if k in state:
+                state[k] = np.array(v, copy=True).astype(state[k].dtype, copy=False)
+        return state
+
+    def verify(self, state: State) -> VerifyResult:
+        """Application-specific acceptance verification."""
+        raise NotImplementedError
+
+    def progress(self, state: State) -> float:
+        """Convergence metric (residual / loss); used for early-stop checks."""
+        return float("nan")
+
+    # ------------------------------------------------------------------ runner
+    def run_iteration(self, state: State) -> State:
+        for region in self.regions():
+            state = region.fn(state)
+        return state
+
+    def run_region(self, state: State, region_idx: int) -> State:
+        return self.regions()[region_idx].fn(state)
+
+    def run_to_completion(self, state: State, first_iter: int, max_iters: int) -> Tuple[State, int]:
+        """Run the main loop from ``first_iter`` for up to ``max_iters`` total
+        iterations (counted across the whole execution).  Returns final state
+        and the number of iterations executed in this call."""
+        executed = 0
+        it = first_iter
+        while it < max_iters:
+            state = self.run_iteration(state)
+            it += 1
+            executed += 1
+            if self.converged(state, it):
+                break
+        return state, executed
+
+    def converged(self, state: State, it: int) -> bool:
+        """Early termination hook: by default run the fixed iteration count."""
+        return it >= self.n_iters
+
+    def run_golden(self, seed: int = 0) -> Tuple[State, int]:
+        state = self.init(seed)
+        state, executed = self.run_to_completion(state, 0, self.n_iters)
+        return state, executed
+
+
+def object_blocks(state: State, names: Sequence[str], block_bytes: int) -> Dict[str, int]:
+    out = {}
+    for n in names:
+        arr = np.asarray(state[n])
+        out[n] = max(1, -(-arr.nbytes // block_bytes))
+    return out

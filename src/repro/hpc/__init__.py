@@ -1,0 +1,33 @@
+"""Region-structured HPC applications (the paper's benchmark spectrum)."""
+from typing import Dict
+
+from ..core.regions import IterativeApp
+from .cg import CGApp
+from .heat import HeatApp
+from .kmeans import KMeansApp
+from .mg import MGApp
+from .montecarlo import MonteCarloApp
+
+_REGISTRY = {
+    "cg": CGApp,
+    "mg": MGApp,
+    "kmeans": KMeansApp,
+    "montecarlo": MonteCarloApp,
+    "heat": HeatApp,
+}
+
+
+def app_names():
+    return sorted(_REGISTRY.keys())
+
+
+def get_app(name: str, **kwargs) -> IterativeApp:
+    """Instantiate an app; kwargs override the default (CI-sized) problem."""
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown app {name!r}; have {app_names()}") from None
+    return cls(**kwargs)
+
+
+__all__ = ["get_app", "app_names", "CGApp", "MGApp", "KMeansApp", "MonteCarloApp", "HeatApp"]

@@ -1,0 +1,113 @@
+"""k-means (Rodinia analogue, data mining).
+
+Two regions: assignment and centroid update.  The points are read-only; the
+only main-loop data object is the centroid table — the paper's extreme case
+("critical DO size: 20 B"): persisting a tiny object transforms
+recomputability (+93 % in the paper) at essentially zero cost.
+
+Acceptance verification: final inertia within a tolerance band of the golden
+run (a fidelity-threshold acceptance per §2.2, not bitwise equality).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.regions import IterativeApp, Region, State, VerifyResult
+
+
+@jax.jit
+def _assign(points: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    d2 = jnp.sum((points[:, None, :] - centroids[None, :, :]) ** 2, axis=-1)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _update(points: jnp.ndarray, assign: jnp.ndarray, centroids: jnp.ndarray, k: int) -> jnp.ndarray:
+    one_hot = jax.nn.one_hot(assign, k, dtype=points.dtype)          # (n, k)
+    sums = one_hot.T @ points                                        # (k, d)
+    counts = one_hot.sum(axis=0)[:, None]                            # (k, 1)
+    return jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), centroids)
+
+
+@jax.jit
+def _inertia(points: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    d2 = jnp.sum((points[:, None, :] - centroids[None, :, :]) ** 2, axis=-1)
+    return jnp.sum(jnp.min(d2, axis=1))
+
+
+class KMeansApp(IterativeApp):
+    name = "kmeans"
+    candidates = ("centroids", "k")
+
+    def __init__(self, n_points: int = 4000, n_dims: int = 8, n_clusters: int = 12,
+                 n_iters: int = 40, seed: int = 0, inertia_tol: float = 1.01,
+                 cluster_scale: float = 3.0):
+        self.cluster_scale = cluster_scale
+        self.n_points = n_points
+        self.n_dims = n_dims
+        self.n_clusters = n_clusters
+        self.n_iters = n_iters
+        self._seed = seed
+        self.inertia_tol = inertia_tol
+        self._golden_inertia: float | None = None
+
+    def init(self, seed: int = 0) -> State:
+        rng = np.random.default_rng(self._seed)
+        # moderately-separated clusters: losing the centroids can strand the
+        # restart in a different local optimum (strict inertia acceptance)
+        true_c = rng.standard_normal((self.n_clusters, self.n_dims)).astype(np.float32) * self.cluster_scale
+        labels = rng.integers(0, self.n_clusters, self.n_points)
+        points = (true_c[labels] + rng.standard_normal((self.n_points, self.n_dims))).astype(np.float32)
+        init_c = points[rng.choice(self.n_points, self.n_clusters, replace=False)].copy()
+        return {
+            "points": points,                       # read-only
+            "centroids": init_c,
+            "assign": np.zeros(self.n_points, np.int32),  # temporal
+            "k": np.zeros(1, np.int64),
+        }
+
+    def _region_assign(self, s: State) -> State:
+        s = dict(s)
+        s["assign"] = np.asarray(_assign(jnp.asarray(s["points"]), jnp.asarray(s["centroids"])))
+        return s
+
+    def _region_update(self, s: State) -> State:
+        s = dict(s)
+        s["centroids"] = np.asarray(
+            _update(jnp.asarray(s["points"]), jnp.asarray(s["assign"]),
+                    jnp.asarray(s["centroids"]), self.n_clusters)
+        )
+        s["k"] = s["k"] + 1
+        return s
+
+    def regions(self) -> Tuple[Region, ...]:
+        return (
+            Region("assign", self._region_assign, writes=("assign",),
+                   reads=("points", "centroids"), cost=4.0,
+                   hot_reads=("centroids",)),
+            Region("update", self._region_update, writes=("centroids", "k"),
+                   reads=("points", "assign"), cost=1.0,
+                   hot_reads=("centroids",)),
+        )
+
+    def _golden_target(self) -> float:
+        if self._golden_inertia is None:
+            s = self.init(self._seed)
+            for _ in range(self.n_iters):
+                s = self.run_iteration(s)
+            self._golden_inertia = float(_inertia(jnp.asarray(s["points"]), jnp.asarray(s["centroids"])))
+        return self._golden_inertia
+
+    def verify(self, state: State) -> VerifyResult:
+        inertia = float(_inertia(jnp.asarray(state["points"]), jnp.asarray(state["centroids"])))
+        target = self._golden_target()
+        ok = np.isfinite(inertia) and inertia <= target * self.inertia_tol
+        return VerifyResult(bool(ok), inertia)
+
+    def progress(self, state: State) -> float:
+        return float(_inertia(jnp.asarray(state["points"]), jnp.asarray(state["centroids"])))

@@ -1,0 +1,86 @@
+"""EP analogue: embarrassingly-parallel Monte Carlo tally (NPB EP).
+
+Each iteration generates a deterministic batch of Gaussian pairs (counter-
+based RNG keyed by the iteration index) and *accumulates* annulus counts.
+Acceptance verification demands an **exact** match with the golden tallies —
+EP's verification in the paper is numerically precise, and accumulation is
+not idempotent across a mid-iteration restart, so recomputability is ~0 even
+with persistence (paper §6: "we do not present results for EP, because its
+inherent recomputability is 0").  This app is the suite's negative control.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.regions import IterativeApp, Region, State, VerifyResult
+
+
+@partial(jax.jit, static_argnames=("batch", "nbins"))
+def _tally_batch(it: jnp.ndarray, batch: int, nbins: int) -> jnp.ndarray:
+    key = jax.random.fold_in(jax.random.PRNGKey(1234), it)
+    xy = jax.random.normal(key, (batch, 2))
+    rad2 = jnp.sum(xy * xy, axis=-1)
+    bins = jnp.clip(jnp.sqrt(rad2).astype(jnp.int32), 0, nbins - 1)
+    return jnp.zeros(nbins, jnp.int32).at[bins].add(1)
+
+
+class MonteCarloApp(IterativeApp):
+    name = "montecarlo"
+    candidates = ("counts", "sums", "k")
+
+    def __init__(self, batch: int = 8192, nbins: int = 10, n_iters: int = 24, seed: int = 0):
+        self.batch = batch
+        self.nbins = nbins
+        self.n_iters = n_iters
+        self._seed = seed
+        self._golden_counts: np.ndarray | None = None
+
+    def init(self, seed: int = 0) -> State:
+        return {
+            "counts": np.zeros(self.nbins, np.int64),
+            "sums": np.zeros(2, np.float64),
+            "scratch": np.zeros(self.batch, np.float32),  # temporal work array
+            "k": np.zeros(1, np.int64),
+        }
+
+    def _generate(self, s: State) -> State:
+        s = dict(s)
+        key = jax.random.fold_in(jax.random.PRNGKey(1234), int(s["k"][0]))
+        xy = jax.random.normal(key, (self.batch, 2))
+        s["scratch"] = np.asarray(jnp.sum(xy * xy, axis=-1), np.float32)
+        return s
+
+    def _accumulate(self, s: State) -> State:
+        s = dict(s)
+        tal = np.asarray(_tally_batch(jnp.asarray(int(s["k"][0])), self.batch, self.nbins)).astype(np.int64)
+        s["counts"] = s["counts"] + tal
+        s["sums"] = s["sums"] + np.array([tal.sum(), float(np.sum(s["scratch"]))])
+        s["k"] = s["k"] + 1
+        return s
+
+    def regions(self) -> Tuple[Region, ...]:
+        return (
+            Region("generate", self._generate, writes=("scratch",), reads=("k",), cost=3.0),
+            Region("accumulate", self._accumulate, writes=("counts", "sums", "k"),
+                   reads=("scratch", "counts", "sums"), cost=1.0),
+        )
+
+    def _golden(self) -> np.ndarray:
+        if self._golden_counts is None:
+            s = self.init(self._seed)
+            for _ in range(self.n_iters):
+                s = self.run_iteration(s)
+            self._golden_counts = s["counts"].copy()
+        return self._golden_counts
+
+    def verify(self, state: State) -> VerifyResult:
+        ok = np.array_equal(state["counts"], self._golden())
+        return VerifyResult(bool(ok), float(np.abs(state["counts"] - self._golden()).sum()))
+
+    def progress(self, state: State) -> float:
+        return float(state["counts"].sum())

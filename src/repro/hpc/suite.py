@@ -1,0 +1,63 @@
+"""Suite-level helpers: canonical cache sizing + CI-sized app instances.
+
+The cache-capacity : working-set ratio is the lever that controls how long
+dirty blocks linger (and therefore how much EasyCrash's flushes matter).  The
+paper chooses inputs whose footprint exceeds the LLC; we default to a cache
+holding ~60 % of one iteration's working set, which reproduces the paper's
+regime where natural write-backs keep *most* — but not all — of NVM
+consistent.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from ..core.cache_sim import CacheConfig
+from ..core.regions import IterativeApp, object_blocks
+from . import get_app
+
+#: CI-sized problem instances (small enough for seconds-scale campaigns)
+CI_SIZES: Dict[str, dict] = {
+    "cg": dict(grid=24, n_iters=300),
+    "mg": dict(grid=32, n_iters=24),
+    "kmeans": dict(n_points=600, n_iters=8),
+    "montecarlo": dict(batch=1024, n_iters=10),
+    "heat": dict(grid=32, n_iters=300),
+}
+
+#: benchmark-sized instances (paper-figure campaigns, minutes-scale)
+BENCH_SIZES: Dict[str, dict] = {
+    "cg": dict(grid=48, n_iters=600),
+    "mg": dict(grid=48, n_iters=24),
+    "kmeans": dict(n_points=4000, n_iters=10),
+    "montecarlo": dict(batch=8192, n_iters=24),
+    "heat": dict(grid=48, n_iters=600),
+}
+
+
+def working_set_blocks(app: IterativeApp, block_bytes: int = 64) -> int:
+    state = app.init(0)
+    names = set()
+    for r in app.regions():
+        names.update(r.reads)
+        names.update(r.writes)
+    blocks = object_blocks(state, [n for n in names if n in state], block_bytes)
+    return sum(blocks.values())
+
+
+def default_cache(app: IterativeApp, ratio: float = 0.45, block_bytes: int = 64) -> CacheConfig:
+    ws = working_set_blocks(app, block_bytes)
+    return CacheConfig(capacity_blocks=max(8, int(ws * ratio)), block_bytes=block_bytes)
+
+
+def ci_app(name: str, **overrides) -> IterativeApp:
+    kw = dict(CI_SIZES[name])
+    kw.update(overrides)
+    return get_app(name, **kw)
+
+
+def bench_app(name: str, **overrides) -> IterativeApp:
+    kw = dict(BENCH_SIZES[name])
+    kw.update(overrides)
+    return get_app(name, **kw)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package: ``kernel.py`` (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ``ops.py`` (jit'd public wrapper), ``ref.py`` (pure-jnp oracle).
+Validated in interpret mode on CPU; compiled natively on TPU.
+
+  flash_attention — blockwise online-softmax attention (causal + window)
+  rwkv6_scan      — RWKV-6 data-dependent-decay recurrence, (64x64) state
+  rglru_scan      — RG-LRU diagonal gated recurrence
+  delta_snapshot  — dirty-block detection for EasyCrash delta flushes
+"""

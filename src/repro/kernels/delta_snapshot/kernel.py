@@ -1,0 +1,51 @@
+"""Dirty-block detection kernel for EasyCrash delta flushes.
+
+The paper's mechanism relies on CLWB being ~free for clean cache blocks; TPUs
+have no dirty bit, so we *compute* it: compare the live shard against the
+last-persisted snapshot at flush-block granularity and emit a per-block
+changed mask.  The host then DMAs only dirty blocks (see
+``repro.core.manager``).  Bandwidth-bound VPU compare + horizontal reduce:
+one pass over 2x the shard bytes, no MXU.
+
+Grid: 1-D over tiles of ``rows_per_tile`` blocks; each block is
+``block_elems`` contiguous elements (default 256 elems = 1 KiB f32, the
+production flush-block size).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ELEMS = 256
+DEFAULT_ROWS_PER_TILE = 64
+
+
+def _delta_kernel(x_ref, prev_ref, o_ref):
+    x = x_ref[...]
+    p = prev_ref[...]
+    diff = (x != p).any(axis=1)
+    o_ref[...] = diff.astype(jnp.int32)
+
+
+def dirty_block_mask_blocks(
+    x: jax.Array, prev: jax.Array,
+    *, rows_per_tile: int = DEFAULT_ROWS_PER_TILE, interpret: bool = True,
+) -> jax.Array:
+    """x, prev: (n_blocks, block_elems) -> int32 (n_blocks,) changed mask."""
+    n, e = x.shape
+    rt = min(rows_per_tile, n)
+    assert n % rt == 0
+    return pl.pallas_call(
+        _delta_kernel,
+        grid=(n // rt,),
+        in_specs=[
+            pl.BlockSpec((rt, e), lambda i: (i, 0)),
+            pl.BlockSpec((rt, e), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(x, prev)

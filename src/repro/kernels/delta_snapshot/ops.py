@@ -1,0 +1,37 @@
+"""Public dirty-block op: flat arrays in, per-block mask out."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK_ELEMS, dirty_block_mask_blocks
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_elems",))
+def dirty_block_mask(x, prev, *, block_elems: int = DEFAULT_BLOCK_ELEMS):
+    """x, prev: same-shape arrays -> int32 (n_blocks,) changed mask.
+
+    Arrays are flattened and zero-padded to a block multiple (zero-padding
+    both sides identically, so padding never reads as dirty).
+    """
+    xf = x.reshape(-1)
+    pf = prev.reshape(-1)
+    n = xf.shape[0]
+    nb = -(-n // block_elems)
+    pad = nb * block_elems - n
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
+        pf = jnp.pad(pf, (0, pad))
+    xb = xf.reshape(nb, block_elems)
+    pb = pf.reshape(nb, block_elems)
+    rt = 64
+    while nb % rt != 0:
+        rt //= 2
+    return dirty_block_mask_blocks(xb, pb, rows_per_tile=max(rt, 1),
+                                   interpret=not _on_tpu())

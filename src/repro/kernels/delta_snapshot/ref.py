@@ -1,0 +1,9 @@
+"""numpy/jnp oracle for dirty-block detection."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dirty_block_mask_reference(x, prev):
+    """x, prev: (n_blocks, block_elems) -> int32 (n_blocks,)."""
+    return (x != prev).any(axis=1).astype(jnp.int32)

@@ -1,0 +1,35 @@
+"""Public flash-attention op in the model's (B, S, H, D) layout."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q, flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k")
+)
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, window: Optional[int] = None,
+    block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """q, k, v: (B, S, H, D) (same head counts — repeat GQA upstream)."""
+    bq = min(block_q, q.shape[1])
+    bk = min(block_k, k.shape[1])
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_bhsd(
+        qt, kt, vt, causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=not _on_tpu(),
+    )
+    return jnp.swapaxes(out, 1, 2)

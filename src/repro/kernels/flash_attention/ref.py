@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (materializes the S x S scores)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, window: Optional[int] = None,
+) -> jax.Array:
+    """q, k, v: (B, H, S, D) -> (B, H, S, D)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * (d ** -0.5)
+    sq, sk = q.shape[2], k.shape[2]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

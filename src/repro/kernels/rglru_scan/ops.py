@@ -1,0 +1,19 @@
+"""Public RG-LRU scan op."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import DEFAULT_BLOCK_D, DEFAULT_BLOCK_T, rglru_scan_btd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_d"))
+def rglru_scan(a, b, *, block_t: int = DEFAULT_BLOCK_T, block_d: int = DEFAULT_BLOCK_D):
+    """a, b: (B, T, D) gates/inputs -> hidden states (B, T, D) f32."""
+    return rglru_scan_btd(a, b, block_t=block_t, block_d=block_d,
+                          interpret=not _on_tpu())

@@ -1,0 +1,21 @@
+"""Public RWKV-6 scan op in the model's (B, S, H, D) layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK_T, rwkv6_scan_bhtd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def rwkv6_scan(r, k, v, w, u, *, block_t: int = DEFAULT_BLOCK_T):
+    """r,k,v,w: (B, S, H, D); u: (H, D) -> (B, S, H, D) f32."""
+    rt, kt, vt, wt = (jnp.swapaxes(x, 1, 2) for x in (r, k, v, w))
+    y = rwkv6_scan_bhtd(rt, kt, vt, wt, u, block_t=block_t, interpret=not _on_tpu())
+    return jnp.swapaxes(y, 1, 2)

@@ -1,0 +1,26 @@
+"""Step-by-step jnp oracle for the RWKV-6 recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_reference(r, k, v, w, u):
+    """r,k,v,w: (B, H, T, D); u: (H, D) -> (B, H, T, D) f32."""
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    b, h, t, d = r.shape
+
+    def step(S, x):
+        rt, kt, vt, wt = x                        # (B, H, D)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B, H, D, D)
+        att = S + u[None, :, :, None] * kv
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, att)
+        return wt[..., :, None] * S + kv, yt
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (r, k, v, w))
+    S0 = jnp.zeros((b, h, d, d), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, xs)       # ys: (T, B, H, D)
+    return jnp.moveaxis(ys, 0, 2)

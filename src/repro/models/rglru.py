@@ -1,0 +1,130 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t)            recurrence gate
+    i_t = sigmoid(W_x x_t)            input gate
+    a_t = a^(c * r_t)                 with a = sigmoid(Lambda), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+preceded by a short causal conv1d, inside a gated block (GeGLU-style).  The
+recurrence is *diagonal*, so the full-sequence path uses
+``jax.lax.associative_scan`` — O(log S) depth, trivially parallel — and the
+Pallas kernel (``repro.kernels.rglru_scan``) implements the blocked version.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import with_logical
+from .config import ModelConfig
+from .layers import dtype_of, normal_init
+
+_C = 8.0
+
+
+def rglru_params(cfg: ModelConfig, key, n: int) -> Dict:
+    d = cfg.d_model
+    dr = cfg.rec.d_rnn
+    cw = cfg.rec.conv_width
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "w_in_x": normal_init(ks[0], (n, d, dr), s, dt),     # recurrence branch
+        "w_in_g": normal_init(ks[1], (n, d, dr), s, dt),     # gate branch
+        "conv": normal_init(ks[2], (n, cw, dr), cw ** -0.5, dt),
+        "w_gate_a": normal_init(ks[3], (n, dr, dr), dr ** -0.5, dt),
+        "w_gate_x": normal_init(ks[4], (n, dr, dr), dr ** -0.5, dt),
+        # Lambda init so a = sigmoid(L) in ~(0.9, 0.999)
+        "lamb": normal_init(ks[5], (n, dr), 0.5, jnp.float32) + 4.0,
+        "w_out": normal_init(ks[6], (n, dr, d), dr ** -0.5, dt),
+    }
+
+
+def rglru_specs() -> Dict:
+    return {
+        "w_in_x": (None, "fsdp", "rnn"),
+        "w_in_g": (None, "fsdp", "rnn"),
+        "conv": (None, None, "rnn"),
+        "w_gate_a": (None, "fsdp", "rnn"),
+        "w_gate_x": (None, "fsdp", "rnn"),
+        "lamb": (None, "rnn"),
+        "w_out": (None, "rnn", "fsdp"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, prefix: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x: (B,S,dr); w: (cw,dr); prefix: (B,cw-1,dr)."""
+    cw = w.shape[0]
+    xp = jnp.concatenate([prefix, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + xp[:, i : i + x.shape[1]] * w[cw - 1 - i][None, None, :]
+    return out
+
+
+def _gates(p: Dict, xr: jax.Array):
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_gate_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_gate_x"]).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["lamb"])[None, None, :]   # log a_t <= 0
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xr.astype(jnp.float32))
+    return a, gated_x
+
+
+def rglru_full(p: Dict, x: jax.Array, cfg: ModelConfig, impl: str = "reference") -> jax.Array:
+    """Full-sequence RG-LRU block.  x: (B, S, d)."""
+    b, s, d = x.shape
+    xr = jnp.einsum("bsd,de->bse", x, p["w_in_x"])
+    g = jnp.einsum("bsd,de->bse", x, p["w_in_g"])
+    xr = with_logical(xr, "batch", None, "rnn")
+    prefix = jnp.zeros((b, cfg.rec.conv_width - 1, xr.shape[-1]), xr.dtype)
+    xr = _causal_conv(xr, p["conv"], prefix)
+    a, gx = _gates(p, xr)
+
+    if impl == "pallas":
+        from ..kernels.rglru_scan.ops import rglru_scan
+
+        h = rglru_scan(a, gx)
+    else:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        aa, hh = jax.lax.associative_scan(combine, (a, gx), axis=1)
+        h = hh
+    h = h.astype(x.dtype) * jax.nn.gelu(g)
+    out = jnp.einsum("bse,ed->bsd", h, p["w_out"])
+    return with_logical(out, "batch", "seq", None)
+
+
+def rglru_init_state(cfg: ModelConfig, n_layers: int, batch: int) -> Dict:
+    dr, cw = cfg.rec.d_rnn, cfg.rec.conv_width
+    return {
+        "h": jnp.zeros((n_layers, batch, dr), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, cw - 1, dr), dtype_of(cfg)),
+    }
+
+
+def rglru_state_specs() -> Dict:
+    return {"h": (None, "batch", "rnn"), "conv": (None, "batch", None, "rnn")}
+
+
+def rglru_decode_step(
+    p: Dict, x: jax.Array, h: jax.Array, conv_state: jax.Array, cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One token.  x: (B,1,d); h: (B,dr); conv_state: (B,cw-1,dr)."""
+    xr = jnp.einsum("bsd,de->bse", x, p["w_in_x"])
+    g = jnp.einsum("bsd,de->bse", x, p["w_in_g"])
+    xr_conv = _causal_conv(xr, p["conv"], conv_state)
+    new_conv = jnp.concatenate([conv_state, xr], axis=1)[:, 1:]
+    a, gx = _gates(p, xr_conv)
+    h_new = a[:, 0] * h + gx[:, 0]
+    y = h_new[:, None, :].astype(x.dtype) * jax.nn.gelu(g)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, h_new, new_conv

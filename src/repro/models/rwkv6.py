@@ -1,0 +1,295 @@
+"""RWKV-6 "Finch" time-mix block (arXiv:2404.05892), attention-free.
+
+State: one matrix S in R^{dh x dh} per head.  Recurrence per token t:
+
+    S_t = diag(w_t) . S_{t-1} + k_t^T v_t            (data-dependent decay)
+    y_t = r_t . (diag(u) . k_t^T v_t + S_{t-1})
+
+with w_t = exp(-exp(decay_t)) computed from the token (the "dynamic decay"
+that distinguishes v6 from v5).  The full-sequence path uses a *chunked*
+formulation (parallel within a chunk, sequential across chunks) — the same
+scheme the Pallas kernel implements on TPU; ``repro.kernels.rwkv6_scan.ref``
+holds the step-by-step oracle.
+
+Token-shift mixing (lerp between x_t and x_{t-1}) follows the RWKV design;
+the low-rank "data-dependent lerp" (ddlerp) uses a single small MLP per
+projection for clarity.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import with_logical
+from .config import ModelConfig
+from .layers import dtype_of, normal_init, rms_norm
+
+
+def _n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv.head_dim
+
+
+def rwkv_params(cfg: ModelConfig, key, n: int) -> Dict:
+    d = cfg.d_model
+    dh = cfg.rwkv.head_dim
+    H = _n_heads(cfg)
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 10)
+    s = d ** -0.5
+    lora = max(32, d // 32)
+    return {
+        "mix_lerp": jnp.zeros((n, 5, d), dt),          # r,k,v,w,g token-shift lerps
+        "w_r": normal_init(ks[0], (n, d, d), s, dt),
+        "w_k": normal_init(ks[1], (n, d, d), s, dt),
+        "w_v": normal_init(ks[2], (n, d, d), s, dt),
+        "w_g": normal_init(ks[3], (n, d, d), s, dt),
+        "w_o": normal_init(ks[4], (n, d, d), s, dt),
+        # dynamic decay: d -> lora -> d
+        "wd_a": normal_init(ks[5], (n, d, lora), s, dt),
+        "wd_b": normal_init(ks[6], (n, lora, d), lora ** -0.5, dt),
+        "decay_base": jnp.full((n, d), -6.0, jnp.float32) + normal_init(ks[9], (n, d), 0.3, jnp.float32),
+        "bonus_u": normal_init(ks[7], (n, H, dh), 0.3, jnp.float32),
+        "ln_x": jnp.zeros((n, d), dt),                 # per-head group-norm gain
+    }
+
+
+def rwkv_specs() -> Dict:
+    return {
+        "mix_lerp": (None, None, None),
+        "w_r": (None, "fsdp", "heads"),
+        "w_k": (None, "fsdp", "heads"),
+        "w_v": (None, "fsdp", "heads"),
+        "w_g": (None, "fsdp", "heads"),
+        "w_o": (None, "heads", "fsdp"),
+        "wd_a": (None, "fsdp", None),
+        "wd_b": (None, None, "heads"),
+        "decay_base": (None, "heads"),
+        # (L, H, dh): H=40 does not divide a 16-way model axis — replicate
+        # (tiny tensor; the big per-head state shards via the d_model dim)
+        "bonus_u": (None, None, None),
+        "ln_x": (None, None),
+    }
+
+
+def _projections(p: Dict, x: jax.Array, x_prev: jax.Array, cfg: ModelConfig):
+    """Token-shift lerped projections.  x: (B, S, d); x_prev: (B, S, d) is x
+    shifted right by one token (decode passes the cached last token)."""
+    lerp = p["mix_lerp"]  # (5, d)
+    def mix(i):
+        m = lerp[i][None, None, :]
+        return x + (x_prev - x) * m
+    r = jnp.einsum("bsd,de->bse", mix(0), p["w_r"])
+    k = jnp.einsum("bsd,de->bse", mix(1), p["w_k"])
+    v = jnp.einsum("bsd,de->bse", mix(2), p["w_v"])
+    dec_in = mix(3)
+    g = jnp.einsum("bsd,de->bse", mix(4), p["w_g"])
+    # dynamic decay (f32 for stability): w = exp(-exp(base + lora(x)))
+    dd = jnp.einsum("bsd,dl->bsl", dec_in, p["wd_a"])
+    dd = jnp.einsum("bsl,ld->bsd", jnp.tanh(dd), p["wd_b"])
+    logdecay = p["decay_base"][None, None, :] + dd.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logdecay))  # in (0, 1)
+    return r, k, v, w, g
+
+
+def _head_split(x, H, dh):
+    b, s, _ = x.shape
+    return x.reshape(b, s, H, dh)
+
+
+def rwkv_scan_full(
+    p: Dict, x: jax.Array, cfg: ModelConfig, impl: str = "reference",
+) -> jax.Array:
+    """Full-sequence RWKV-6.  x: (B, S, d) -> (B, S, d)."""
+    H, dh = _n_heads(cfg), cfg.rwkv.head_dim
+    b, s, d = x.shape
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, w, g = _projections(p, x, x_prev, cfg)
+    r = _head_split(r, H, dh).astype(jnp.float32)
+    k = _head_split(k, H, dh).astype(jnp.float32)
+    v = _head_split(v, H, dh).astype(jnp.float32)
+    w = _head_split(w, H, dh)
+
+    if impl == "pallas":
+        from ..kernels.rwkv6_scan.ops import rwkv6_scan
+
+        y = rwkv6_scan(r, k, v, w, p["bonus_u"])
+    elif impl == "chunked":
+        y = _rwkv_chunked(r, k, v, w, p["bonus_u"])
+    else:
+        def step(S, inputs):
+            rt, kt, vt, wt = inputs          # (B,H,dh) each
+            kv = kt[..., :, None] * vt[..., None, :]        # (B,H,dh,dh)
+            att = S + p["bonus_u"][None, :, :, None] * kv
+            y = jnp.einsum("bhk,bhkv->bhv", rt, att)
+            S = wt[..., :, None] * S + kv
+            return S, y
+
+        S0 = jnp.zeros((b, H, dh, dh), jnp.float32)
+        xs = (
+            jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+            jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0),
+        )
+        _, ys = jax.lax.scan(step, S0, xs)
+        y = jnp.moveaxis(ys, 0, 1)  # (B,S,H,dh)
+
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y, p["ln_x"], cfg.norm_eps)     # group-norm stand-in
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", y, p["w_o"])
+    return with_logical(out, "batch", "seq", None)
+
+
+def _rwkv_chunked(r, k, v, w, u, chunk: int = 128):
+    """Layout-native chunked RWKV-6 on (B, S, H, D) — §Perf iteration 4.
+
+    Same math as :func:`rwkv_chunked_bhtd` but without the (B,S,H,D) ->
+    (B,H,S,D) transposes of all four streams (HLO copies of full
+    activations): splitting S into (nc, c) is a free reshape, and only the
+    cross-chunk scan inputs move their chunk axis to the front.
+
+    chunk=128 measured best on the memory roofline; the model's decay
+    parameterization (w = exp(-exp(-6 +- 1.3)) >= 0.99/step) keeps in-chunk
+    log-decay sums << the clamp bound at this length.
+    """
+    b, s, h, dh = r.shape
+    c = min(chunk, s)
+    if s % c != 0:
+        y = rwkv_chunked_bhtd(
+            jnp.swapaxes(r, 1, 2), jnp.swapaxes(k, 1, 2),
+            jnp.swapaxes(v, 1, 2), jnp.swapaxes(w, 1, 2), u, chunk=chunk,
+        )
+        return jnp.swapaxes(y, 1, 2)
+    nc = s // c
+    logw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30))
+    rc = r.reshape(b, nc, c, h, dh)
+    kc = k.reshape(b, nc, c, h, dh)
+    vc = v.reshape(b, nc, c, h, dh)
+    lw = logw.reshape(b, nc, c, h, dh)
+    L = jnp.cumsum(lw, axis=2)
+    L_prev = L - lw
+    L_end = L[:, :, -1:, :, :]
+    clamp = lambda x: jnp.clip(x, -30.0, 30.0)
+    r_hat = rc * jnp.exp(clamp(L_prev))
+    k_hat = kc * jnp.exp(clamp(-L))
+    k_end = kc * jnp.exp(clamp(L_end - L))
+
+    f32, bf = jnp.float32, jnp.bfloat16
+    A = jnp.einsum("bnchd,bnshd->bnhcs", r_hat.astype(bf), k_hat.astype(bf),
+                   preferred_element_type=f32)
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    A = jnp.where(mask[None, None, None], A, 0.0)
+    diag = jnp.einsum("bnchd,bnchd->bnch", rc * u[None, None, None, :, :], kc)
+    y_intra = jnp.einsum("bnhcs,bnshd->bnchd", A.astype(bf), vc.astype(bf),
+                         preferred_element_type=f32) + diag[..., None] * vc
+    S_contrib = jnp.einsum("bnshd,bnshv->bnhdv", k_end.astype(bf), vc.astype(bf),
+                           preferred_element_type=f32)
+
+    def body(S, inputs):
+        rh, sc, le = inputs                 # (B,c,H,D), (B,H,D,D), (B,1,H,D)
+        y_inter = jnp.einsum("bchd,bhdv->bchv", rh, S)
+        S = jnp.exp(clamp(le[:, 0]))[..., :, None] * S + sc
+        return S, y_inter
+
+    S0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    xs = (jnp.moveaxis(r_hat, 1, 0), jnp.moveaxis(S_contrib, 1, 0),
+          jnp.moveaxis(L_end, 1, 0))
+    _, y_inter = jax.lax.scan(body, S0, xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 1)
+    return y.reshape(b, s, h, dh)
+
+
+def rwkv_chunked_bhtd(r, k, v, w, u, chunk: int = 64):
+    """Chunked RWKV-6: matmul form inside chunks, state carried across.
+
+    Within a chunk of C tokens, with per-dim log-decays L_t = sum_{s<=t} ln w_s:
+        y_t = (r_t . e^{L_{t-1}}) S_in
+            + sum_{s<t} <r_t . e^{L_{t-1}-L_s}, k_s> v_s + <r_t . u, k_t> v_t
+        S_out = diag(e^{L_C}) S_in + sum_s (k_s . e^{L_C-L_s})^T v_s
+    so the intra-chunk part is one masked (C x C) matmul per head — the state
+    touches HBM once per *chunk* instead of once per token, cutting the
+    memory-roofline term by ~C (the same scheme the Pallas kernel runs
+    on-chip on TPU; this is its XLA-portable form for the dry-run and CPU).
+    Exponent differences are clamped at +-30: heavier-decayed terms are
+    below f32 resolution of the survivors anyway.  Inputs (B, H, T, D).
+    """
+    b, h, t, dh = r.shape
+    c = min(chunk, t)
+    assert t % c == 0
+    nc = t // c
+    logw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30))
+    rc = r.reshape(b, h, nc, c, dh)
+    kc = k.reshape(b, h, nc, c, dh)
+    vc = v.reshape(b, h, nc, c, dh)
+    lw = logw.reshape(b, h, nc, c, dh)
+    L = jnp.cumsum(lw, axis=3)                  # L_t (inclusive)
+    L_prev = L - lw                             # L_{t-1}
+    L_end = L[:, :, :, -1:, :]                  # L_C
+    clamp = lambda x: jnp.clip(x, -30.0, 30.0)
+    r_hat = rc * jnp.exp(clamp(L_prev))         # r_t e^{L_{t-1}}
+    k_hat = kc * jnp.exp(clamp(-L))             # k_s e^{-L_s}
+    k_end = kc * jnp.exp(clamp(L_end - L))      # k_s e^{L_C - L_s}
+
+    # big einsums run in bf16 with f32 accumulation (MXU-native); the
+    # exponent math above stays f32
+    f32 = jnp.float32
+    bf = jnp.bfloat16
+    A = jnp.einsum("bhncd,bhnsd->bhncs", r_hat.astype(bf), k_hat.astype(bf),
+                   preferred_element_type=f32)
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    A = jnp.where(mask[None, None, None], A, 0.0)
+    diag = jnp.einsum("bhncd,bhncd->bhnc", rc * u[None, :, None, None, :], kc)
+    y_intra = jnp.einsum("bhncs,bhnsv->bhncv", A.astype(bf), vc.astype(bf),
+                         preferred_element_type=f32) + diag[..., None] * vc
+    S_contrib = jnp.einsum("bhnsd,bhnsv->bhndv", k_end.astype(bf), vc.astype(bf),
+                           preferred_element_type=f32)
+
+    def body(S, inputs):
+        rh, sc, le = inputs                     # (B,H,C,D), (B,H,D,D), (B,H,1,D)
+        y_inter = jnp.einsum("bhcd,bhdv->bhcv", rh, S)
+        S = jnp.exp(clamp(le[:, :, 0]))[..., :, None] * S + sc
+        return S, y_inter
+
+    S0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    xs = (jnp.moveaxis(r_hat, 2, 0), jnp.moveaxis(S_contrib, 2, 0),
+          jnp.moveaxis(L_end, 2, 0))
+    _, y_inter = jax.lax.scan(body, S0, xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 2)
+    return y.reshape(b, h, t, dh)
+
+
+def rwkv_init_state(cfg: ModelConfig, n_layers: int, batch: int) -> Dict:
+    H, dh = _n_heads(cfg), cfg.rwkv.head_dim
+    return {
+        "S": jnp.zeros((n_layers, batch, H, dh, dh), jnp.float32),
+        "x_last": jnp.zeros((n_layers, batch, cfg.d_model), dtype_of(cfg)),
+    }
+
+
+def rwkv_state_specs() -> Dict:
+    return {
+        "S": (None, "batch", "heads", None, None),
+        "x_last": (None, "batch", None),
+    }
+
+
+def rwkv_decode_step(
+    p: Dict, x: jax.Array, S: jax.Array, x_last: jax.Array, cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One token.  x: (B, 1, d); S: (B, H, dh, dh); x_last: (B, d)."""
+    H, dh = _n_heads(cfg), cfg.rwkv.head_dim
+    b, _, d = x.shape
+    r, k, v, w, g = _projections(p, x, x_last[:, None, :], cfg)
+    rt = _head_split(r, H, dh)[:, 0].astype(jnp.float32)
+    kt = _head_split(k, H, dh)[:, 0].astype(jnp.float32)
+    vt = _head_split(v, H, dh)[:, 0].astype(jnp.float32)
+    wt = _head_split(w, H, dh)[:, 0]
+    kv = kt[..., :, None] * vt[..., None, :]
+    att = S + p["bonus_u"][None, :, :, None] * kv
+    y = jnp.einsum("bhk,bhkv->bhv", rt, att)
+    S_new = wt[..., :, None] * S + kv
+    y = y.reshape(b, 1, d).astype(x.dtype)
+    y = rms_norm(y, p["ln_x"], cfg.norm_eps) * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", y, p["w_o"])
+    return out, S_new, x[:, 0]

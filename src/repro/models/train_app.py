@@ -1,0 +1,183 @@
+"""LM training as an EasyCrash IterativeApp.
+
+This closes the loop between the paper and the LM substrate: SGD/Adam
+training *is* one of the paper's "naturally resilient iterative methods"
+(§2.2 cites k-means and CNN training), so the crash-test machinery runs on a
+reduced transformer exactly like on CG/MG.
+
+Data objects (the paper's granularity is whole objects, so parameter /
+moment trees flatten to one vector each):
+
+    params — the weights            (expected: critical)
+    mu, nu — Adam moments           (expected: non-critical — they re-warm)
+    grads  — last gradient          (temporal)
+    k      — step counter           (always persisted)
+
+Regions: ``grads`` (fwd+bwd) and ``update`` (optimizer).  Acceptance
+verification: eval loss within a band of the golden run's final loss —
+fidelity-threshold acceptance, the ML analogue of a convergence test.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.regions import IterativeApp, Region, State, VerifyResult
+from .config import ModelConfig, scaled_down
+from .transformer import init_params, loss_and_aux
+
+
+def _synthetic_batch(key_int: int, batch: int, seq: int, vocab: int) -> jnp.ndarray:
+    """Learnable stream: affine next-token map with 10% noise."""
+    key = jax.random.PRNGKey(9000)
+    key = jax.random.fold_in(key, key_int)
+    k1, k2, k3 = jax.random.split(key, 3)
+    t0 = jax.random.randint(k1, (batch, 1), 0, vocab)
+    toks = [t0]
+    tok = t0
+    for _ in range(seq):
+        tok = (tok * 7 + 3) % vocab
+        toks.append(tok)
+    tokens = jnp.concatenate(toks, axis=1)
+    noise = jax.random.bernoulli(k2, 0.1, tokens.shape)
+    rand = jax.random.randint(k3, tokens.shape, 0, vocab)
+    return jnp.where(noise, rand, tokens).astype(jnp.int32)
+
+
+class LMTrainApp(IterativeApp):
+    name = "lm-train"
+    candidates = ("params", "mu", "nu", "k")
+    iterator_object = "k"
+
+    def __init__(
+        self,
+        base: ModelConfig = None,
+        n_iters: int = 40,
+        batch: int = 8,
+        seq: int = 32,
+        lr: float = 2e-2,
+        loss_band: float = 1.05,
+        seed: int = 0,
+    ):
+        from ..configs import get_arch
+
+        base = base or get_arch("stablelm-1.6b")
+        self.cfg = scaled_down(base, width=64)
+        self.n_iters = n_iters
+        self.batch = batch
+        self.seq = seq
+        self.lr = lr
+        self.loss_band = loss_band
+        self._seed = seed
+        self._shapes = None
+        self._treedef = None
+        self._golden_loss = None
+        self._build()
+
+    # ------------------------------------------------------------- plumbing
+    def _build(self):
+        cfg = self.cfg
+        p0 = init_params(cfg, jax.random.PRNGKey(self._seed))
+        leaves, treedef = jax.tree.flatten(p0)
+        self._treedef = treedef
+        self._shapes = [(l.shape, l.dtype) for l in leaves]
+        self._sizes = [int(np.prod(s)) for s, _ in self._shapes]
+
+        def unflatten(vec):
+            out = []
+            off = 0
+            for (shape, dt), size in zip(self._shapes, self._sizes):
+                out.append(vec[off:off + size].reshape(shape).astype(dt))
+                off += size
+            return jax.tree.unflatten(self._treedef, out)
+
+        def flatten(tree):
+            return jnp.concatenate(
+                [x.reshape(-1).astype(jnp.float32) for x in jax.tree.leaves(tree)]
+            )
+
+        self._unflatten = unflatten
+        self._flatten = flatten
+
+        @jax.jit
+        def grad_fn(vec, it):
+            params = unflatten(vec)
+            tokens = _synthetic_batch(it, self.batch, self.seq, cfg.vocab)
+            loss, _ = loss_and_aux(cfg, params, {"tokens": tokens})
+            return loss
+
+        self._vgrad = jax.jit(jax.grad(grad_fn))
+
+        @jax.jit
+        def eval_fn(vec):
+            params = unflatten(vec)
+            losses = []
+            for i in range(4):
+                tokens = _synthetic_batch(100_000 + i, self.batch, self.seq, cfg.vocab)
+                loss, _ = loss_and_aux(cfg, params, {"tokens": tokens})
+                losses.append(loss)
+            return jnp.stack(losses).mean()
+
+        self._eval = eval_fn
+
+    # ----------------------------------------------------------------- state
+    def init(self, seed: int = 0) -> State:
+        p0 = init_params(self.cfg, jax.random.PRNGKey(self._seed))
+        vec = np.asarray(self._flatten(p0))
+        return {
+            "params": vec,
+            "mu": np.zeros_like(vec),
+            "nu": np.zeros_like(vec),
+            "grads": np.zeros_like(vec),
+            "k": np.zeros(1, np.int64),
+        }
+
+    def _region_grads(self, s: State) -> State:
+        s = dict(s)
+        g = self._vgrad(jnp.asarray(s["params"]), int(s["k"][0]))
+        s["grads"] = np.asarray(g, np.float32)
+        return s
+
+    def _region_update(self, s: State) -> State:
+        s = dict(s)
+        b1, b2, eps = 0.9, 0.95, 1e-8
+        t = int(s["k"][0]) + 1
+        g = s["grads"]
+        mu = b1 * s["mu"] + (1 - b1) * g
+        nu = b2 * s["nu"] + (1 - b2) * g * g
+        mu_hat = mu / (1 - b1 ** t)
+        nu_hat = nu / (1 - b2 ** t)
+        s["params"] = s["params"] - self.lr * mu_hat / (np.sqrt(nu_hat) + eps)
+        s["mu"], s["nu"] = mu, nu
+        s["k"] = s["k"] + 1
+        return s
+
+    def regions(self) -> Tuple[Region, ...]:
+        return (
+            Region("grads", self._region_grads, writes=("grads",),
+                   reads=("params", "k"), cost=3.0),
+            Region("update", self._region_update,
+                   writes=("mu", "nu", "params", "k"),
+                   reads=("grads", "mu", "nu", "params"), cost=1.0),
+        )
+
+    # ----------------------------------------------------------- verification
+    def _golden(self) -> float:
+        if self._golden_loss is None:
+            s = self.init(self._seed)
+            for _ in range(self.n_iters):
+                s = self.run_iteration(s)
+            self._golden_loss = float(self._eval(jnp.asarray(s["params"])))
+        return self._golden_loss
+
+    def verify(self, state: State) -> VerifyResult:
+        loss = float(self._eval(jnp.asarray(state["params"])))
+        target = self._golden() * self.loss_band
+        return VerifyResult(bool(np.isfinite(loss) and loss <= target), loss)
+
+    def progress(self, state: State) -> float:
+        return float(self._eval(jnp.asarray(state["params"])))

@@ -1,0 +1,9 @@
+from .adamw import OptState, adamw_init, adamw_update, opt_state_specs
+from .schedule import cosine_schedule, linear_warmup
+from .compression import compress_topk, decompress_topk, quantize_int8, dequantize_int8
+
+__all__ = [
+    "OptState", "adamw_init", "adamw_update", "opt_state_specs",
+    "cosine_schedule", "linear_warmup",
+    "compress_topk", "decompress_topk", "quantize_int8", "dequantize_int8",
+]

@@ -1,0 +1,94 @@
+"""AdamW built from scratch (no optax on the box), pytree-functional.
+
+Moments shard exactly like their parameters (the spec tree is reused), and
+the moment dtype is a per-config knob — the 340B cell needs bf16 moments to
+fit a single pod.  Global-norm clipping is fused into the update.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def adamw_init(params: Params, moment_dtype: str = "float32") -> Dict:
+    dt = jnp.dtype(moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_spec_tree: Any) -> Dict:
+    """Moments inherit their parameter's sharding; count is replicated."""
+    return {
+        "mu": param_spec_tree,
+        "nu": param_spec_tree,
+        "count": (),
+    }
+
+
+def _global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    params: Params,
+    grads: Params,
+    state: Dict,
+    lr: jax.Array,
+    cfg: AdamWConfig = AdamWConfig(),
+) -> Tuple[Params, Dict, Dict[str, jax.Array]]:
+    count = state["count"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu32 = mu.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        nu32 = nu.astype(jnp.float32) * cfg.b2 + jnp.square(g) * (1 - cfg.b2)
+        mu_hat = mu32 / (1 - cfg.b1 ** count.astype(jnp.float32))
+        nu_hat = nu32 / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), mu32.astype(mu.dtype), nu32.astype(nu.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        a, b, c = upd(p, g, mu, nu)
+        new_p.append(a)
+        new_mu.append(b)
+        new_nu.append(c)
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {
+            "mu": jax.tree.unflatten(treedef, new_mu),
+            "nu": jax.tree.unflatten(treedef, new_nu),
+            "count": count,
+        },
+        {"grad_norm": gnorm},
+    )
+
+
+class OptState(dict):
+    """Marker type (opt state is a plain dict pytree)."""

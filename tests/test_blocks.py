@@ -1,0 +1,81 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blocks import (
+    block_diff_mask,
+    inconsistent_rate,
+    mix_blocks,
+    num_blocks,
+)
+
+
+def test_num_blocks():
+    assert num_blocks(0) == 0
+    assert num_blocks(1) == 1
+    assert num_blocks(64) == 1
+    assert num_blocks(65) == 2
+    assert num_blocks(128, block_bytes=32) == 4
+
+
+def test_mix_blocks_basic():
+    old = np.zeros(32, np.float32)   # 128 B = 2 blocks
+    new = np.ones(32, np.float32)
+    out = mix_blocks(old, new, np.array([True, False]))
+    assert (out[:16] == 1).all() and (out[16:] == 0).all()
+
+
+def test_mix_blocks_partial_tail():
+    old = np.zeros(20, np.float32)   # 80 B = 2 blocks (2nd partial)
+    new = np.ones(20, np.float32)
+    out = mix_blocks(old, new, np.array([False, True]))
+    assert (out[:16] == 0).all() and (out[16:] == 1).all()
+
+
+def test_inconsistent_rate():
+    a = np.zeros(16, np.float32)
+    b = a.copy()
+    assert inconsistent_rate(a, b) == 0.0
+    b[0] = 1.0
+    assert 0 < inconsistent_rate(a, b) <= 4 / 64
+
+
+@given(
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+    block_bytes=st.sampled_from([16, 64, 128]),
+)
+@settings(max_examples=50, deadline=None)
+def test_mix_blocks_roundtrip(n, seed, block_bytes):
+    rng = np.random.default_rng(seed)
+    old = rng.standard_normal(n).astype(np.float32)
+    new = rng.standard_normal(n).astype(np.float32)
+    nb = num_blocks(old.nbytes, block_bytes)
+    # all-new mask reproduces new; all-old reproduces old
+    assert np.array_equal(mix_blocks(old, new, np.ones(nb, bool), block_bytes), new)
+    assert np.array_equal(mix_blocks(old, new, np.zeros(nb, bool), block_bytes), old)
+    # a random mask only ever takes bytes from old or new
+    mask = rng.random(nb) < 0.5
+    out = mix_blocks(old, new, mask, block_bytes)
+    ob = out.view(np.uint8)
+    for src in (old, new):
+        pass
+    takes = (ob == old.view(np.uint8)) | (ob == new.view(np.uint8))
+    assert takes.all()
+
+
+@given(n=st.integers(1, 100), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_block_diff_mask_matches_mix(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal(n).astype(np.float32)
+    b = a.copy()
+    nb = num_blocks(a.nbytes)
+    flip = rng.integers(0, n)
+    b[flip] += 1.0
+    mask = block_diff_mask(a, b)
+    assert mask.shape == (nb,)
+    assert mask.sum() == 1
+    assert mask[(flip * 4) // 64]
+    # mixing b into a along the diff mask reproduces b
+    assert np.array_equal(mix_blocks(a, b, mask), b)

@@ -1,0 +1,141 @@
+"""Cache-model correctness: event simulation vs a brute-force reference."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache_sim import (
+    CacheConfig,
+    Flush,
+    RegionEvents,
+    Sweep,
+    resolve_live_values,
+    resolve_nvm_image,
+    simulate_window,
+)
+
+
+def brute_force(capacity, obj_blocks, regions):
+    """Reference write-back LRU; returns list of (t, obj, blk, seq) records."""
+    from collections import OrderedDict
+
+    lines = OrderedDict()  # (obj, blk) -> writer seq or -1
+    records = []
+    t = 0
+    for reg in regions:
+        for ev in reg.events:
+            if isinstance(ev, Sweep):
+                for b in range(obj_blocks[ev.obj]):
+                    key = (ev.obj, b)
+                    prev = lines.pop(key, None)
+                    if prev is None and len(lines) >= capacity:
+                        (eo, eb), eseq = lines.popitem(last=False)
+                        if eseq >= 0:
+                            records.append((t, eo, eb, eseq))
+                    if ev.write:
+                        lines[key] = reg.seq
+                    else:
+                        lines[key] = prev if (prev is not None and prev >= 0) else -1
+                    t += 1
+            elif isinstance(ev, Flush):
+                for (o, b), seq in list(lines.items()):
+                    if o == ev.obj and seq >= 0:
+                        records.append((t, o, b, seq))
+                        lines[(o, b)] = -1
+    return records
+
+
+@given(
+    capacity=st.integers(2, 40),
+    sizes=st.lists(st.integers(1, 20), min_size=1, max_size=3),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_simulation_matches_bruteforce(capacity, sizes, seed):
+    rng = np.random.default_rng(seed)
+    objs = {f"o{i}": s for i, s in enumerate(sizes)}
+    names = list(objs)
+    regions = []
+    seq = 0
+    for it in range(2):
+        for ridx in range(rng.integers(1, 4)):
+            events = []
+            for _ in range(rng.integers(1, 4)):
+                o = names[rng.integers(0, len(names))]
+                kind = rng.integers(0, 3)
+                if kind == 2:
+                    events.append(Flush(o))
+                else:
+                    events.append(Sweep(o, write=bool(kind)))
+            regions.append(RegionEvents(seq=seq, iter_idx=it, region_idx=ridx, events=tuple(events)))
+            seq += 1
+    trace = simulate_window(CacheConfig(capacity, 64), objs, regions)
+    expected = brute_force(capacity, objs, regions)
+    got = []
+    for o in objs:
+        for t, b, s in zip(trace.wb_t[o], trace.wb_block[o], trace.wb_seq[o]):
+            got.append((int(t), o, int(b), int(s)))
+    assert sorted(got) == sorted(expected)
+
+
+def _mk_regions(events_per_region):
+    return [
+        RegionEvents(seq=i, iter_idx=0, region_idx=i, events=tuple(evs))
+        for i, evs in enumerate(events_per_region)
+    ]
+
+
+def test_flush_makes_object_consistent():
+    """Crash right after a flush: the flushed object's NVM image equals the
+    live value (zero inconsistency) — the paper's consistency guarantee."""
+    objs = {"a": 8}
+    regions = _mk_regions([[Sweep("a", True), Flush("a")]])
+    trace = simulate_window(CacheConfig(4, 64), objs, regions)
+    start = {"a": np.zeros(8 * 16, np.float32)}
+    after = {"a": np.ones(8 * 16, np.float32)}
+    img = resolve_nvm_image(trace, trace.t_end, start, {0: after}, 64)
+    assert np.array_equal(img["a"], after["a"])
+
+
+def test_unflushed_small_object_is_stale():
+    """A dirty object that fits in cache and is never flushed: crash loses
+    everything — NVM retains the start value."""
+    objs = {"a": 4}
+    regions = _mk_regions([[Sweep("a", True)]])
+    trace = simulate_window(CacheConfig(16, 64), objs, regions)
+    start = {"a": np.zeros(4 * 16, np.float32)}
+    after = {"a": np.ones(4 * 16, np.float32)}
+    img = resolve_nvm_image(trace, trace.t_end, start, {0: after}, 64)
+    assert np.array_equal(img["a"], start["a"])
+
+
+def test_eviction_writes_back():
+    """An object larger than the cache leaks its head blocks to NVM."""
+    objs = {"a": 10}
+    regions = _mk_regions([[Sweep("a", True)]])
+    trace = simulate_window(CacheConfig(4, 64), objs, regions)
+    assert trace.eviction_writes == 6  # blocks 0..5 evicted by 4-block LRU
+    start = {"a": np.zeros(10 * 16, np.float32)}
+    after = {"a": np.ones(10 * 16, np.float32)}
+    img = resolve_nvm_image(trace, trace.t_end, start, {0: after}, 64)
+    flat = img["a"].reshape(10, 16)
+    assert (flat[:6] == 1).all() and (flat[6:] == 0).all()
+
+
+def test_live_values_partial_sweep():
+    objs = {"a": 10}
+    regions = _mk_regions([[Sweep("a", True)]])
+    trace = simulate_window(CacheConfig(4, 64), objs, regions)
+    start = {"a": np.zeros(10 * 16, np.float32)}
+    after = {"a": np.ones(10 * 16, np.float32)}
+    live = resolve_live_values(trace, 3, start, {0: after}, 64)
+    flat = live["a"].reshape(10, 16)
+    assert (flat[:3] == 1).all() and (flat[3:] == 0).all()
+
+
+def test_write_accounting_flush_clean_is_free():
+    objs = {"a": 8}
+    regions = _mk_regions([[Sweep("a", True), Flush("a"), Flush("a")]])
+    trace = simulate_window(CacheConfig(16, 64), objs, regions)
+    assert trace.flush_writes == 8          # first flush writes all dirty
+    assert trace.flushed_clean_blocks == 8  # second flush: all clean, free
+    assert trace.flush_ops == 2

@@ -1,0 +1,80 @@
+"""Crash-campaign behaviour on the HPC suite (CI problem sizes)."""
+import numpy as np
+import pytest
+
+from repro.core import CacheConfig, CrashTester, PersistPlan
+from repro.core.workflow import run_workflow
+from repro.hpc.suite import ci_app, default_cache
+
+
+@pytest.fixture(scope="module")
+def mg_setup():
+    app = ci_app("mg")
+    return app, default_cache(app)
+
+
+def test_golden_run_verifies(mg_setup):
+    app, cache = mg_setup
+    tester = CrashTester(app, PersistPlan.none(), cache)
+    assert tester.golden_iters > 0
+
+
+def test_campaign_classes_partition(mg_setup):
+    app, cache = mg_setup
+    camp = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(12)
+    fr = camp.class_fractions()
+    assert sum(fr.values()) == pytest.approx(1.0)
+    assert all(r.outcome in ("S1", "S2", "S3", "S4") for r in camp.records)
+    assert all(0.0 <= v <= 1.0 for r in camp.records for v in r.inconsistency.values())
+
+
+def test_persistence_never_hurts_mg(mg_setup):
+    """Flushing the critical object at loop end must not reduce
+    recomputability (and, for MG, should improve it)."""
+    app, cache = mg_setup
+    base = CrashTester(app, PersistPlan.none(), cache, seed=0).run_campaign(30)
+    plan = PersistPlan.at_loop_end(("u",), app)
+    ec = CrashTester(app, plan, cache, seed=0).run_campaign(30)
+    assert ec.recomputability >= base.recomputability
+
+
+def test_flushed_object_has_lower_inconsistency(mg_setup):
+    app, cache = mg_setup
+    base = CrashTester(app, PersistPlan.none(), cache, seed=1).run_campaign(25)
+    plan = PersistPlan.best(("u",), app)
+    ec = CrashTester(app, plan, cache, seed=1).run_campaign(25)
+    mean_u = lambda c: np.mean([r.inconsistency["u"] for r in c.records])
+    assert mean_u(ec) <= mean_u(base) + 1e-9
+
+
+def test_montecarlo_strict_verification():
+    """The EP-like negative control: mid-accumulate crashes cannot pass the
+    exact-tally acceptance, flushing the tallies fixes it."""
+    app = ci_app("montecarlo")
+    cache = default_cache(app)
+    base = CrashTester(app, PersistPlan.none(), cache, seed=0).run_campaign(30)
+    plan = PersistPlan(objects=("counts", "sums"), region_freq={1: 1})
+    ec = CrashTester(app, plan, cache, seed=0).run_campaign(30)
+    assert ec.recomputability >= base.recomputability
+    assert ec.recomputability > 0.9
+
+
+def test_cg_reports_extra_iterations():
+    app = ci_app("cg")
+    cache = default_cache(app)
+    camp = CrashTester(app, PersistPlan.none(), cache, seed=2).run_campaign(25)
+    s2 = [r for r in camp.records if r.outcome == "S2"]
+    if s2:  # CG's fragile recurrence typically needs extra iterations
+        assert all(r.extra_iters >= 1 for r in s2)
+
+
+def test_workflow_end_to_end():
+    app = ci_app("kmeans")
+    cache = default_cache(app)
+    wf = run_workflow(app, n_tests=40, cache=cache, seed=0)
+    assert wf.critical  # at least one critical object found
+    assert "centroids" in wf.critical
+    assert wf.region_selection.total_overhead <= wf.t_s + 1e-9
+    # validation: the selected plan improves on the baseline
+    val = CrashTester(app, wf.plan, cache, seed=9).run_campaign(40)
+    assert val.recomputability >= wf.baseline_campaign.recomputability

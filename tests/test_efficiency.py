@@ -1,0 +1,79 @@
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.efficiency import (
+    SystemConfig,
+    efficiency_with,
+    efficiency_without,
+    scale_mtbf,
+    tau_threshold,
+    young_interval,
+)
+
+
+def test_young_interval():
+    assert young_interval(320.0, 12 * 3600) == pytest.approx(math.sqrt(2 * 320 * 43200))
+
+
+def test_efficiency_baseline_sane():
+    cfg = SystemConfig(mtbf=12 * 3600, t_chk=320.0)
+    r = efficiency_without(cfg)
+    assert 0.5 < r.efficiency < 1.0
+    assert r.interval == young_interval(320.0, cfg.mtbf)
+
+
+def test_easycrash_beats_cr_at_high_recomputability():
+    """The paper's headline: at the measured 82 % recomputability EasyCrash
+    improves system efficiency, most at large checkpoint cost."""
+    for t_chk, min_gain in [(32.0, 0.0), (320.0, 0.005), (3200.0, 0.05)]:
+        cfg = SystemConfig(mtbf=12 * 3600, t_chk=t_chk)
+        base = efficiency_without(cfg).efficiency
+        ec = efficiency_with(cfg, recomputability=0.82, t_s=0.015).efficiency
+        assert ec - base >= min_gain, (t_chk, base, ec)
+
+
+def test_zero_recomputability_is_worse():
+    """R = 0: EasyCrash adds flush overhead and saves nothing."""
+    cfg = SystemConfig(mtbf=12 * 3600, t_chk=320.0)
+    assert (
+        efficiency_with(cfg, recomputability=0.0, t_s=0.03).efficiency
+        < efficiency_without(cfg).efficiency
+    )
+
+
+def test_gain_grows_with_scale():
+    """Paper Fig 11: the EasyCrash advantage grows as MTBF shrinks."""
+    gains = []
+    for nodes in (100_000, 200_000, 400_000):
+        mtbf = scale_mtbf(12 * 3600, 100_000, nodes)
+        cfg = SystemConfig(mtbf=mtbf, t_chk=3200.0)
+        gains.append(
+            efficiency_with(cfg, 0.82, t_s=0.015).efficiency
+            - efficiency_without(cfg).efficiency
+        )
+    assert gains[0] < gains[1] < gains[2]
+
+
+def test_tau_threshold_is_crossing_point():
+    cfg = SystemConfig(mtbf=12 * 3600, t_chk=320.0)
+    tau = tau_threshold(cfg, t_s=0.03)
+    assert 0.0 < tau < 1.0
+    base = efficiency_without(cfg).efficiency
+    assert efficiency_with(cfg, tau + 0.02, 0.03).efficiency > base
+    assert efficiency_with(cfg, max(tau - 0.02, 0.0), 0.03).efficiency < base
+
+
+@given(
+    mtbf_h=st.floats(1.0, 100.0),
+    t_chk=st.floats(10.0, 5000.0),
+    r=st.floats(0.0, 0.99),
+)
+@settings(max_examples=50, deadline=None)
+def test_efficiency_bounded_and_monotone_in_r(mtbf_h, t_chk, r):
+    cfg = SystemConfig(mtbf=mtbf_h * 3600, t_chk=t_chk)
+    e1 = efficiency_with(cfg, r, t_s=0.02)
+    e2 = efficiency_with(cfg, min(r + 0.05, 0.995), t_s=0.02)
+    assert 0.0 <= e1.efficiency <= 1.0
+    assert e2.efficiency >= e1.efficiency - 1e-9  # higher R never hurts

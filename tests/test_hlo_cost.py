@@ -1,0 +1,104 @@
+"""Trip-count-aware HLO cost parser vs XLA cost_analysis ground truth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo, split_computations
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile()
+
+
+def test_flops_match_cost_analysis_without_scans():
+    def fn(w, x):
+        return jnp.tanh(x @ w) @ w.T
+
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 128), jnp.float32)
+    c = _compile(fn, w, x)
+    hc = analyze_hlo(c.as_text())
+    ca = c.cost_analysis()
+    assert hc.flops == pytest.approx(float(ca["flops"]), rel=0.01)
+    assert hc.trip_counts == []
+
+
+def test_scan_flops_scaled_by_trip_count():
+    L = 8
+
+    def scanned(ws, x):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, ws)
+        return h
+
+    ws = jax.ShapeDtypeStruct((L, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+    c = _compile(scanned, ws, x)
+    hc = analyze_hlo(c.as_text())
+    exact = 2 * 16 * 64 * 64 * L
+    assert hc.flops == pytest.approx(exact, rel=0.01)
+    assert L in hc.trip_counts
+
+
+def test_nested_scan_multipliers():
+    A, L = 3, 4
+
+    def fn(ws, x):
+        def outer(h, _):
+            def inner(hh, w):
+                return jnp.tanh(hh @ w), None
+            h2, _ = jax.lax.scan(inner, h, ws)
+            return h2, None
+        h, _ = jax.lax.scan(outer, x, None, length=A)
+        return h
+
+    ws = jax.ShapeDtypeStruct((L, 32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+    c = _compile(fn, ws, x)
+    hc = analyze_hlo(c.as_text())
+    exact = 2 * 8 * 32 * 32 * L * A
+    assert hc.flops == pytest.approx(exact, rel=0.01)
+    assert sorted(hc.trip_counts) == sorted([A, L])
+
+
+def test_collectives_parsed_with_groups():
+    import subprocess, sys, os
+
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, sys
+sys.path.insert(0, {os.path.join(os.path.dirname(__file__), '..', 'src')!r})
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_tiny_mesh
+
+mesh = make_tiny_mesh()  # (data=2, model=4)
+def fn(w, x):
+    return jax.grad(lambda w: ((x @ w) ** 2).mean())(w)
+w = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+x = jax.ShapeDtypeStruct((32, 256), jnp.float32)
+with mesh:
+    c = jax.jit(fn,
+        in_shardings=(NamedSharding(mesh, P(None, "model")), NamedSharding(mesh, P("data", None))),
+        out_shardings=NamedSharding(mesh, P(None, "model")),
+    ).lower(w, x).compile()
+hc = analyze_hlo(c.as_text())
+assert hc.collective_bytes > 0, "expected collective traffic"
+assert "all-reduce" in hc.collective_breakdown
+print("COLL_OK", hc.collective_bytes)
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True)
+    assert "COLL_OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_split_computations_structure():
+    def fn(x):
+        return jnp.sum(x * 2.0)
+
+    c = _compile(fn, jax.ShapeDtypeStruct((64,), jnp.float32))
+    comps, entry = split_computations(c.as_text())
+    assert entry in comps
+    assert len(comps[entry].ops) > 0

@@ -1,0 +1,65 @@
+"""Every HPC app: golden run passes its own acceptance verification."""
+import numpy as np
+import pytest
+
+from repro.hpc import app_names, get_app
+from repro.hpc.suite import CI_SIZES, ci_app
+
+
+@pytest.mark.parametrize("name", sorted(CI_SIZES))
+def test_golden_verifies(name):
+    app = ci_app(name)
+    state, iters = app.run_golden()
+    res = app.verify(state)
+    assert res.passed, (name, res)
+    assert iters > 0
+
+
+@pytest.mark.parametrize("name", sorted(CI_SIZES))
+def test_regions_declare_their_writes(name):
+    """Region metadata must match behaviour: a region only mutates objects it
+    declares in ``writes`` (the cache model depends on this)."""
+    app = ci_app(name)
+    state = app.init(0)
+    # run one warm-up iteration so temporals are populated
+    state = app.run_iteration(state)
+    for region in app.regions():
+        before = {k: np.array(v, copy=True) for k, v in state.items()}
+        state = region.fn(state)
+        for k in state:
+            if k in region.writes:
+                continue
+            assert np.array_equal(before[k], state[k]), (
+                f"{name}: region {region.name} mutated undeclared object {k}"
+            )
+
+
+@pytest.mark.parametrize("name", sorted(CI_SIZES))
+def test_restart_init_installs_persisted(name):
+    app = ci_app(name)
+    state = app.init(0)
+    state = app.run_iteration(state)
+    persisted = {c: state[c] for c in app.candidates if c in state}
+    restored = app.restart_init(0, persisted)
+    for c, v in persisted.items():
+        assert np.allclose(restored[c].astype(np.float64), np.asarray(v, np.float64)), (name, c)
+
+
+@pytest.mark.parametrize("name", sorted(CI_SIZES))
+def test_deterministic_iterations(name):
+    """Redo of the same iteration from the same state must be bit-identical
+    (the basis for trajectory-match acceptance)."""
+    app = ci_app(name)
+    s0 = app.init(0)
+    s0 = app.run_iteration(s0)
+    snap = {k: np.array(v, copy=True) for k, v in s0.items()}
+    a = app.run_iteration({k: np.array(v, copy=True) for k, v in snap.items()})
+    b = app.run_iteration({k: np.array(v, copy=True) for k, v in snap.items()})
+    for k in a:
+        assert np.array_equal(a[k], b[k]), (name, k)
+
+
+def test_registry():
+    assert set(app_names()) == set(CI_SIZES)
+    with pytest.raises(KeyError):
+        get_app("nope")

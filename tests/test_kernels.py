@@ -1,0 +1,144 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.delta_snapshot.ops import dirty_block_mask
+from repro.kernels.delta_snapshot.ref import dirty_block_mask_reference
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.rglru_scan.ops import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_reference
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_reference
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,s,d,causal,window,blk",
+    [
+        (2, 4, 256, 64, True, None, 128),
+        (1, 2, 128, 64, True, None, 64),
+        (2, 2, 256, 64, True, 64, 64),
+        (1, 3, 256, 128, False, None, 128),
+        (1, 1, 512, 64, True, 128, 128),
+    ],
+)
+def test_flash_attention_matches_ref(b, h, s, d, causal, window, blk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, h, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, h, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, block_q=blk, block_k=blk)
+    ref = attention_reference(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=causal, window=window,
+    )
+    ref = jnp.swapaxes(ref, 1, 2)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_block_shape_independence():
+    """Block size is a tiling choice, never a semantics choice."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q, k, v = (jax.random.normal(kk, (1, 256, 2, 64), jnp.float32) for kk in ks)
+    a = flash_attention(q, k, v, block_q=64, block_k=64)
+    b = flash_attention(q, k, v, block_q=128, block_k=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ------------------------------------------------------------------ rwkv6
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,t,d,bt", [(2, 3, 64, 16, 32), (1, 2, 128, 64, 64), (1, 1, 96, 32, 32)])
+def test_rwkv6_scan_matches_ref(b, h, t, d, bt, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    r = jax.random.normal(ks[0], (b, t, h, d), dtype) * 0.5
+    k = jax.random.normal(ks[1], (b, t, h, d), dtype) * 0.5
+    v = jax.random.normal(ks[2], (b, t, h, d), dtype) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, d), jnp.float32)).astype(dtype)
+    u = (jax.random.normal(ks[4], (h, d), jnp.float32) * 0.3)
+    out = rwkv6_scan(r, k, v, w, u, block_t=bt)
+    ref = rwkv6_reference(
+        jnp.swapaxes(r, 1, 2), jnp.swapaxes(k, 1, 2),
+        jnp.swapaxes(v, 1, 2), jnp.swapaxes(w, 1, 2), u,
+    )
+    ref = jnp.swapaxes(ref, 1, 2)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol, rtol=tol)
+
+
+def test_rwkv6_chunking_independence():
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    b, t, h, d = 1, 128, 2, 32
+    r, k, v = (jax.random.normal(kk, (b, t, h, d)) * 0.5 for kk in ks[:3])
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, d)))
+    u = jax.random.normal(ks[4], (h, d)) * 0.3
+    a = rwkv6_scan(r, k, v, w, u, block_t=32)
+    bb = rwkv6_scan(r, k, v, w, u, block_t=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bb), atol=1e-4)
+
+
+# ------------------------------------------------------------------ rglru
+@pytest.mark.parametrize("b,t,d,bt,bd", [(2, 64, 128, 32, 128), (1, 128, 256, 64, 128), (3, 32, 64, 32, 64)])
+def test_rglru_scan_matches_ref(b, t, d, bt, bd):
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, t, d))) * 0.98
+    x = jax.random.normal(ks[1], (b, t, d))
+    out = rglru_scan(a, x, block_t=bt, block_d=bd)
+    ref = rglru_reference(a, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+@given(
+    t_pow=st.integers(4, 7),
+    d_mult=st.integers(1, 3),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=10, deadline=None)
+def test_rglru_scan_property(t_pow, d_mult, seed):
+    t, d = 2 ** t_pow, 64 * d_mult
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (1, t, d)))
+    x = jax.random.normal(ks[1], (1, t, d))
+    out = rglru_scan(a, x, block_t=min(64, t), block_d=64)
+    ref = rglru_reference(a, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+# ----------------------------------------------------------- delta snapshot
+def test_dirty_block_mask_exact():
+    x = jnp.zeros(1024, jnp.float32)
+    p = x.at[300].set(1.0)
+    mask = dirty_block_mask(x, p, block_elems=256)
+    assert mask.shape == (4,)
+    assert mask.tolist() == [0, 1, 0, 0]
+
+
+@given(
+    n=st.integers(1, 5000),
+    nflip=st.integers(0, 8),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=30, deadline=None)
+def test_dirty_block_mask_property(n, nflip, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    p = x.copy()
+    idx = rng.choice(n, size=min(nflip, n), replace=False)
+    p[idx] += 1.0
+    got = np.asarray(dirty_block_mask(jnp.asarray(x), jnp.asarray(p), block_elems=256))
+    nb = -(-n // 256)
+    xb = np.zeros(nb * 256, np.float32); xb[:n] = x
+    pb = np.zeros(nb * 256, np.float32); pb[:n] = p
+    ref = np.asarray(dirty_block_mask_reference(
+        jnp.asarray(xb.reshape(nb, 256)), jnp.asarray(pb.reshape(nb, 256))))
+    assert np.array_equal(got, ref)
+    # every flipped element's block is flagged
+    for i in idx:
+        assert got[i // 256] == 1

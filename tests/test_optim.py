@@ -1,0 +1,88 @@
+"""Optimizer substrate: AdamW math, schedules, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    compress_topk,
+    cosine_schedule,
+    decompress_topk,
+    dequantize_int8,
+    quantize_int8,
+)
+from repro.optim.adamw import AdamWConfig
+
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    cfg = AdamWConfig(weight_decay=0.0)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, stats = adamw_update(params, grads, state, lr=0.1, cfg=cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+    assert int(state["count"]) == 200
+
+
+def test_adamw_clips_gradients():
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params)
+    _, _, stats = adamw_update(params, {"w": jnp.full(4, 1e6)}, state, lr=0.0)
+    assert float(stats["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+
+
+def test_adamw_bf16_moments():
+    params = {"w": jnp.zeros(4, jnp.bfloat16)}
+    state = adamw_init(params, moment_dtype="bfloat16")
+    assert state["mu"]["w"].dtype == jnp.bfloat16
+    new_p, new_s, _ = adamw_update(params, {"w": jnp.ones(4, jnp.bfloat16)}, state, lr=1e-3)
+    assert new_s["mu"]["w"].dtype == jnp.bfloat16
+    assert new_p["w"].dtype == jnp.bfloat16
+
+
+def test_cosine_schedule_shape():
+    warm = float(cosine_schedule(jnp.asarray(0), 100, 1000, 1.0))
+    peak = float(cosine_schedule(jnp.asarray(100), 100, 1000, 1.0))
+    end = float(cosine_schedule(jnp.asarray(1000), 100, 1000, 1.0))
+    assert warm < 0.05 and peak == pytest.approx(1.0, abs=0.02)
+    assert end == pytest.approx(0.1, abs=0.02)  # floor_frac
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(8, 512))
+@settings(max_examples=25, deadline=None)
+def test_int8_quantization_bounded_error(seed, n):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    q, s = quantize_int8(g)
+    back = dequantize_int8(q, s, g.dtype)
+    max_err = float(jnp.max(jnp.abs(back - g)))
+    assert max_err <= float(s) * 0.5 + 1e-7  # half-ULP of the quant grid
+
+
+def test_topk_keeps_largest():
+    g = jnp.array([0.1, -5.0, 0.2, 3.0, -0.05])
+    vals, idx, residual = compress_topk(g, frac=0.4)  # k = 2
+    back = decompress_topk(vals, idx, g.shape, g.dtype)
+    np.testing.assert_allclose(np.asarray(back), [0, -5.0, 0, 3.0, 0], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(residual), [0.1, 0, 0.2, 0, -0.05], atol=1e-6)
+    # decomposition is lossless: back + residual == g
+    np.testing.assert_allclose(np.asarray(back + residual), np.asarray(g), atol=1e-6)
+
+
+@pytest.mark.parametrize("compression", [None, "int8", "topk:0.1"])
+def test_train_step_with_compression(compression):
+    from repro.configs import get_arch
+    from repro.launch.steps import init_train_state, make_train_step
+    from repro.models import scaled_down
+
+    cfg = scaled_down(get_arch("stablelm-1.6b"))
+    step = make_train_step(cfg, grad_compression=compression, total_steps=5)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, cfg.vocab)}
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    for leaf in jax.tree.leaves(new_state["params"]):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))

@@ -1,0 +1,137 @@
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.selection import (
+    interpolate_ckx,
+    select_regions,
+    select_regions_from_gains,
+    spearman,
+    t_sf,
+)
+
+
+# ---------------------------------------------------------------- spearman
+def _spearman_reference(x, y):
+    """Naive Spearman: Pearson on average ranks."""
+    def rank(v):
+        v = np.asarray(v, float)
+        order = np.argsort(v, kind="stable")
+        r = np.empty(len(v))
+        i = 0
+        sv = v[order]
+        while i < len(v):
+            j = i
+            while j + 1 < len(v) and sv[j + 1] == sv[i]:
+                j += 1
+            r[order[i:j + 1]] = (i + j) / 2 + 1
+            i = j + 1
+        return r
+
+    rx, ry = rank(x), rank(y)
+    rx -= rx.mean()
+    ry -= ry.mean()
+    return float(rx @ ry / np.sqrt((rx @ rx) * (ry @ ry)))
+
+
+def test_spearman_perfect_monotone():
+    rs, p = spearman([1, 2, 3, 4, 5], [10, 20, 30, 40, 50])
+    assert rs == pytest.approx(1.0)
+    assert p < 0.05
+
+
+def test_spearman_anticorrelation():
+    x = np.linspace(0, 1, 30)
+    rs, p = spearman(x, -x + 0.001 * np.sin(x * 50))
+    assert rs < -0.9
+    assert p < 1e-6
+
+
+def test_spearman_degenerate():
+    rs, p = spearman([1.0] * 10, list(range(10)))
+    assert math.isnan(rs) and p == 1.0
+
+
+def test_t_sf_known_values():
+    # P(T > 0) = 0.5 for any df
+    assert t_sf(0.0, 10) == pytest.approx(0.5, abs=1e-9)
+    # df=1 (Cauchy): P(T > 1) = 0.25
+    assert t_sf(1.0, 1) == pytest.approx(0.25, abs=1e-6)
+    # large df ~ normal: P(T > 1.96) ~ 0.025
+    assert t_sf(1.96, 10_000) == pytest.approx(0.025, abs=1e-3)
+
+
+@given(
+    n=st.integers(5, 60),
+    seed=st.integers(0, 2**31 - 1),
+    ties=st.booleans(),
+)
+@settings(max_examples=60, deadline=None)
+def test_spearman_matches_reference(n, seed, ties):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n)
+    y = rng.standard_normal(n)
+    if ties:
+        x = np.round(x)          # heavy ties
+        y = (y > 0).astype(float)  # binary, like recompute outcomes
+    rs, p = spearman(x, y)
+    if math.isnan(rs):
+        return
+    assert rs == pytest.approx(_spearman_reference(x, y), abs=1e-9)
+    assert 0.0 <= p <= 1.0
+
+
+# ---------------------------------------------------------------- knapsack
+def test_interpolation_eq5():
+    assert interpolate_ckx(0.9, 0.3, 1) == pytest.approx(0.9)
+    assert interpolate_ckx(0.9, 0.3, 2) == pytest.approx(0.6)
+    assert interpolate_ckx(0.9, 0.3, 6) == pytest.approx(0.4)
+
+
+def test_select_regions_respects_budget():
+    a = [0.25, 0.25, 0.25, 0.25]
+    c_base = [0.2, 0.2, 0.2, 0.2]
+    c_max = [0.9, 0.9, 0.9, 0.9]
+    l = [0.02, 0.02, 0.02, 0.02]
+    sel = select_regions(a, c_base, c_max, l, t_s=0.03, tau=0.1)
+    assert sel.total_overhead <= 0.03 + 1e-9
+    assert len(sel.choices) >= 1
+
+
+def test_select_regions_prefers_high_gain():
+    # region 1 has far higher gain at the same cost: must be selected
+    sel = select_regions(
+        a=[0.5, 0.5], c_base=[0.1, 0.1], c_max=[0.15, 0.95],
+        l=[0.02, 0.02], t_s=0.025, tau=0.0,
+    )
+    assert any(c.region_idx == 1 for c in sel.choices)
+    assert all(c.region_idx != 0 or c.freq > 1 for c in sel.choices)
+
+
+def test_select_regions_skips_negative_gain():
+    sel = select_regions_from_gains(
+        gains={0: -0.1, 1: 0.0}, overheads={0: 0.001, 1: 0.001},
+        y_base=0.5, t_s=0.03, tau=0.0,
+    )
+    assert sel.choices == []
+    assert sel.expected_recomputability == pytest.approx(0.5)
+
+
+@given(
+    w=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+    ts=st.floats(0.005, 0.1),
+)
+@settings(max_examples=40, deadline=None)
+def test_knapsack_budget_invariant(w, seed, ts):
+    rng = np.random.default_rng(seed)
+    gains = {k: float(rng.uniform(-0.2, 0.5)) for k in range(w)}
+    overheads = {k: float(rng.uniform(0.001, 0.08)) for k in range(w)}
+    sel = select_regions_from_gains(gains, overheads, 0.3, t_s=ts, tau=0.0)
+    assert sel.total_overhead <= ts + 1e-9
+    # at most one choice per region; only positive gains chosen
+    regions = [c.region_idx for c in sel.choices]
+    assert len(regions) == len(set(regions))
+    assert all(c.gain > 0 for c in sel.choices)
