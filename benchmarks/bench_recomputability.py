@@ -8,15 +8,16 @@ transformed into correct recomputation".
 """
 from __future__ import annotations
 
-from .common import APPS, Timer, campaign_size, emit
+from .common import APPS, Timer, campaign_size, campaign_workers, emit
 
 
 def run(fast: bool = True):
-    from repro.core import CacheConfig, CrashTester, PersistPlan
+    from repro.core import CrashTester, PersistPlan
     from repro.core.workflow import run_workflow
     from repro.hpc.suite import bench_app, ci_app, default_cache
 
     n = campaign_size(fast)
+    workers = campaign_workers()
     rows = []
     agg_base_fail = 0.0
     agg_fixed = 0.0
@@ -24,8 +25,10 @@ def run(fast: bool = True):
         with Timer() as t:
             app = ci_app(name) if fast else bench_app(name)
             cache = default_cache(app)
-            wf = run_workflow(app, n_tests=n, cache=cache, seed=0)
-            validated = CrashTester(app, wf.plan, cache, seed=777).run_campaign(n)
+            wf = run_workflow(app, n_tests=n, cache=cache, seed=0, n_workers=workers)
+            validated = CrashTester(app, wf.plan, cache, seed=777).run_campaign(
+                n, n_workers=workers
+            )
             best = wf.best_campaign
         base_fr = wf.baseline_campaign.class_fractions()
         val_fr = validated.class_fractions()
@@ -41,7 +44,7 @@ def run(fast: bool = True):
             "S4_base": round(base_fr["S4"], 3),
             "recomp_objects_only": round(
                 CrashTester(app, PersistPlan.at_loop_end(wf.critical, app), cache,
-                            seed=5).run_campaign(n).recomputability, 3),
+                            seed=5).run_campaign(n, n_workers=workers).recomputability, 3),
             "recomp_easycrash": round(val_fr["S1"], 3),
             "recomp_best": round(best.recomputability, 3),
             "critical_objects": "|".join(wf.critical),

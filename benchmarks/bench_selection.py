@@ -6,29 +6,31 @@ Fig 5  — three strategies: none / selected objects / all candidates.
 """
 from __future__ import annotations
 
-from .common import APPS, Timer, campaign_size, emit
+from .common import APPS, Timer, campaign_size, campaign_workers, emit
 
 
 def run(fast: bool = True):
-    from repro.core import CacheConfig, CrashTester, PersistPlan
+    from repro.core import CrashTester, PersistPlan
     from repro.core.selection import select_objects
     from repro.hpc.suite import bench_app, ci_app, default_cache
 
     n = campaign_size(fast)
+    workers = campaign_workers()
     app = ci_app("mg") if fast else bench_app("mg")
     cache = default_cache(app)
     rows = []
 
-    base = CrashTester(app, PersistPlan.none(), cache, seed=0).run_campaign(n)
+    base = CrashTester(app, PersistPlan.none(), cache, seed=0).run_campaign(n, n_workers=workers)
     rows.append({"figure": "4a", "config": "none", "recomputability": round(base.recomputability, 3)})
     for obj in ("u", "r", "k"):
-        camp = CrashTester(app, PersistPlan.at_loop_end((obj,), app), cache, seed=0).run_campaign(n)
+        camp = CrashTester(app, PersistPlan.at_loop_end((obj,), app), cache,
+                           seed=0).run_campaign(n, n_workers=workers)
         rows.append({"figure": "4a", "config": f"persist_{obj}",
                      "recomputability": round(camp.recomputability, 3)})
 
     for k in range(len(app.regions())):
         plan = PersistPlan(objects=("u",), region_freq={k: 1})
-        camp = CrashTester(app, plan, cache, seed=0).run_campaign(n)
+        camp = CrashTester(app, plan, cache, seed=0).run_campaign(n, n_workers=workers)
         rows.append({"figure": "4b", "config": f"persist_u_at_{app.regions()[k].name}",
                      "recomputability": round(camp.recomputability, 3)})
 
@@ -36,11 +38,13 @@ def run(fast: bool = True):
     for name in APPS:
         a = ci_app(name) if fast else bench_app(name)
         c = default_cache(a)
-        b0 = CrashTester(a, PersistPlan.none(), c, seed=1).run_campaign(n)
+        b0 = CrashTester(a, PersistPlan.none(), c, seed=1).run_campaign(n, n_workers=workers)
         scores = select_objects(b0, [x for x in a.candidates if x != a.iterator_object])
         selected = tuple(s.name for s in scores if s.critical) or tuple(a.candidates[:1])
-        c_sel = CrashTester(a, PersistPlan.best(selected, a), c, seed=1).run_campaign(n)
-        c_all = CrashTester(a, PersistPlan.best(tuple(a.candidates), a), c, seed=1).run_campaign(n)
+        c_sel = CrashTester(a, PersistPlan.best(selected, a), c,
+                            seed=1).run_campaign(n, n_workers=workers)
+        c_all = CrashTester(a, PersistPlan.best(tuple(a.candidates), a), c,
+                            seed=1).run_campaign(n, n_workers=workers)
         rows.append({
             "figure": "5", "config": name,
             "recomputability": f"none={b0.recomputability:.2f}"

@@ -11,11 +11,22 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
 
-APPS = ("cg", "mg", "kmeans", "montecarlo", "heat")
+APPS = ("cg", "mg", "kmeans", "montecarlo", "heat", "sor", "pagerank")
 
 
 def campaign_size(fast: bool) -> int:
     return 60 if fast else 300
+
+
+def campaign_workers(default: int = 1) -> int:
+    """Worker count for campaign fan-out (REPRO_WORKERS=N, or N=0 for all
+    cores).  Campaign results are identical for every worker count."""
+    raw = os.environ.get("REPRO_WORKERS", "")
+    try:
+        n = int(raw) if raw else default
+    except ValueError:
+        return default
+    return os.cpu_count() or 1 if n <= 0 else n
 
 
 def emit(rows: List[Dict[str, object]], name: str) -> None:

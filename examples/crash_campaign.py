@@ -3,7 +3,14 @@ architecture zoo): characterize recomputability of Adam-trained transformer
 state, select critical data objects, and show that parameters are critical
 while optimizer moments re-warm.
 
+Campaigns fan out over processes with ``--workers N`` and checkpoint shard
+results to a JSONL store with ``--store PATH``: kill the campaign mid-run,
+re-run the same command, and only the missing shards execute (results are
+identical to an uninterrupted run, for any worker count).
+
 Usage:  PYTHONPATH=src python examples/crash_campaign.py [--arch rwkv6-3b]
+                                                         [--workers 4]
+                                                         [--store camp.jsonl]
 """
 import argparse
 import os
@@ -25,6 +32,11 @@ def main() -> None:
     ap.add_argument("--tests", type=int, default=30)
     ap.add_argument("--iters", type=int, default=30)
     ap.add_argument("--loss-band", type=float, default=1.01)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="campaign shards fan out over this many processes")
+    ap.add_argument("--store", default=None, metavar="PATH",
+                    help="JSONL shard store; an interrupted campaign resumes "
+                         "from it and executes only the missing shards")
     args = ap.parse_args()
 
     app = LMTrainApp(base=get_arch(args.arch), n_iters=args.iters,
@@ -35,7 +47,9 @@ def main() -> None:
     print(f"arch={args.arch} (reduced) params={state['params'].size:,} floats; "
           f"cache={cache.capacity_blocks} blocks of {ws_blocks}")
 
-    base = CrashTester(app, PersistPlan.none(), cache, seed=0).run_campaign(args.tests)
+    base = CrashTester(app, PersistPlan.none(), cache, seed=0).run_campaign(
+        args.tests, n_workers=args.workers, store_path=args.store
+    )
     print(f"\nbaseline (no persistence): {base.class_fractions()}")
     print("per-object inconsistency -> recompute correlation (paper §5.1):")
     for s in select_objects(base, [c for c in app.candidates if c != "k"]):
@@ -48,7 +62,7 @@ def main() -> None:
     print("mean inconsistency rates:", {k: round(v, 3) for k, v in mean_inc.items()})
 
     ec = CrashTester(app, PersistPlan.at_loop_end(("params",), app), cache,
-                     seed=0).run_campaign(args.tests)
+                     seed=0).run_campaign(args.tests, n_workers=args.workers)
     print(f"\npersist params at loop end: {ec.class_fractions()}")
     print(f"recomputability {base.recomputability:.0%} -> {ec.recomputability:.0%}")
     print("\ntakeaway: SGD/Adam training is a naturally-resilient iterative "

@@ -13,8 +13,22 @@ from .blocks import (
     mix_blocks,
     num_blocks,
 )
-from .cache_sim import CacheConfig, Flush, RegionEvents, Sweep, simulate_window
-from .crash_tester import CampaignResult, CrashRecord, CrashTester, PersistPlan
+from .cache_sim import (
+    CacheConfig,
+    Flush,
+    RegionEvents,
+    Sweep,
+    resolve_window_images,
+    simulate_window,
+)
+from .campaign_store import CampaignStore, CampaignStoreError
+from .crash_tester import (
+    CampaignResult,
+    CrashRecord,
+    CrashTester,
+    PersistPlan,
+    PlannedTest,
+)
 from .efficiency import (
     SystemConfig,
     efficiency_with,
@@ -31,8 +45,9 @@ from .workflow import WorkflowResult, run_workflow
 __all__ = [
     "NVMArena", "WriteStats", "DEFAULT_BLOCK_BYTES", "block_diff_mask",
     "inconsistent_rate", "mix_blocks", "num_blocks", "CacheConfig", "Flush",
-    "RegionEvents", "Sweep", "simulate_window", "CampaignResult",
-    "CrashRecord", "CrashTester", "PersistPlan", "SystemConfig",
+    "RegionEvents", "Sweep", "resolve_window_images", "simulate_window",
+    "CampaignStore", "CampaignStoreError", "CampaignResult",
+    "CrashRecord", "CrashTester", "PersistPlan", "PlannedTest", "SystemConfig",
     "efficiency_with", "efficiency_without", "scale_mtbf", "tau_threshold",
     "young_interval", "EasyCrashManager", "FlushPolicy", "flatten_state",
     "unflatten_state", "IterativeApp", "Region", "State", "VerifyResult",

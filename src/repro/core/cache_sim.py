@@ -264,19 +264,11 @@ def resolve_nvm_image(
     or initialization).  This captures the paper's §8 small-hot-object case:
     data resident in cache forever leaves only ancient values in NVM.
     """
-    from .blocks import mix_blocks, obj_num_blocks
-
     out: Dict[str, np.ndarray] = {}
     for obj, base in start_values.items():
-        base = np.asarray(base)
-        if chronic_base is not None and obj in chronic_base:
-            nb = obj_num_blocks(base, block_bytes)
-            chronic_mask = np.ones(nb, dtype=bool)
-            if trace.wb_block[obj].size:
-                seen = np.unique(trace.wb_block[obj])
-                chronic_mask[seen[seen < nb]] = False
-            if chronic_mask.any():
-                base = mix_blocks(chronic_base[obj], base, ~chronic_mask, block_bytes)
+        base = _chronic_adjusted_base(
+            trace, obj, np.asarray(base), chronic_base, block_bytes
+        )
         t = trace.wb_t[obj]
         n = int(np.searchsorted(t, crash_t, side="right"))
         if n == 0:
@@ -288,6 +280,111 @@ def resolve_nvm_image(
             base, trace.wb_block[obj][:n], trace.wb_seq[obj][:n], versions, block_bytes
         )
     return out
+
+
+def _chronic_adjusted_base(
+    trace: WindowTrace,
+    obj: str,
+    base: np.ndarray,
+    chronic_base: Optional[Mapping[str, np.ndarray]],
+    block_bytes: int,
+) -> np.ndarray:
+    """Replace blocks with no write-back anywhere in the window by their
+    chronic (last-flushed / initial) values — the paper's §8 small-hot-object
+    case, where data resident in cache forever leaves only ancient NVM."""
+    from .blocks import mix_blocks, obj_num_blocks
+
+    if chronic_base is None or obj not in chronic_base:
+        return base
+    nb = obj_num_blocks(base, block_bytes)
+    chronic_mask = np.ones(nb, dtype=bool)
+    if trace.wb_block[obj].size:
+        seen = np.unique(trace.wb_block[obj])
+        chronic_mask[seen[seen < nb]] = False
+    if not chronic_mask.any():
+        return base
+    return mix_blocks(chronic_base[obj], base, ~chronic_mask, block_bytes)
+
+
+def resolve_window_images(
+    trace: WindowTrace,
+    crash_ts: Sequence[int],
+    start_values: Mapping[str, np.ndarray],
+    seq_values: Mapping[int, Mapping[str, np.ndarray]],
+    block_bytes: int,
+    chronic_base: Optional[Mapping[str, np.ndarray]] = None,
+) -> Tuple[List[Dict[str, np.ndarray]], List[Dict[str, np.ndarray]]]:
+    """Batch form of :func:`resolve_nvm_image` + :func:`resolve_live_values`.
+
+    All crash times of one window are resolved in a single ascending pass
+    over the window's write-back records and write sweeps: each record/sweep
+    byte range is applied to a running image exactly once, and a snapshot is
+    taken at every crash time.  Equivalent to calling the single-shot
+    resolvers per crash time (write-backs compose in record order; sweeps
+    never overlap in time, so extending the in-flight sweep before applying
+    later ones reproduces the per-time application order), but one campaign
+    window costs one pass instead of one pass per test.
+
+    Returns ``(nvm_images, live_values)`` aligned with ``crash_ts``.
+    """
+    order = sorted(range(len(crash_ts)), key=lambda i: crash_ts[i])
+    nvm_out: List[Optional[Dict[str, np.ndarray]]] = [None] * len(crash_ts)
+    live_out: List[Optional[Dict[str, np.ndarray]]] = [None] * len(crash_ts)
+
+    shapes: Dict[str, Tuple[np.dtype, Tuple[int, ...]]] = {}
+    nvm_cur: Dict[str, np.ndarray] = {}    # running NVM image, flat uint8
+    live_cur: Dict[str, np.ndarray] = {}   # running live image, flat uint8
+    for obj, base in start_values.items():
+        base = np.asarray(base)
+        shapes[obj] = (base.dtype, base.shape)
+        nvm_base = _chronic_adjusted_base(trace, obj, base, chronic_base, block_bytes)
+        nvm_cur[obj] = np.ascontiguousarray(nvm_base).copy().view(np.uint8).reshape(-1)
+        live_cur[obj] = np.ascontiguousarray(base).copy().view(np.uint8).reshape(-1)
+    wb_cursor = {obj: 0 for obj in start_values}
+    sweep_done = [0] * len(trace.sweeps)
+
+    for idx in order:
+        ct = int(crash_ts[idx])
+        nvm_snap: Dict[str, np.ndarray] = {}
+        for obj in start_values:
+            n = int(np.searchsorted(trace.wb_t[obj], ct, side="right"))
+            c = wb_cursor[obj]
+            if n > c:
+                flat = nvm_cur[obj]
+                nbytes = flat.size
+                blocks = trace.wb_block[obj][c:n].tolist()
+                seqs = trace.wb_seq[obj][c:n].tolist()
+                for blk, seq in zip(blocks, seqs):
+                    src = np.ascontiguousarray(seq_values[seq][obj]).view(np.uint8).reshape(-1)
+                    lo = blk * block_bytes
+                    hi = min(lo + block_bytes, nbytes)
+                    flat[lo:hi] = src[lo:hi]
+                wb_cursor[obj] = n
+            dtype, shape = shapes[obj]
+            nvm_snap[obj] = nvm_cur[obj].copy().view(dtype).reshape(shape)
+        nvm_out[idx] = nvm_snap
+
+        for si, sw in enumerate(trace.sweeps):
+            if sw.t_start >= ct:
+                break
+            if sw.obj not in live_cur:
+                continue
+            done = min(sw.n_blocks, ct - sw.t_start)
+            prev = sweep_done[si]
+            if done > prev:
+                flat = live_cur[sw.obj]
+                src = np.ascontiguousarray(seq_values[sw.seq][sw.obj]).view(np.uint8).reshape(-1)
+                lo = prev * block_bytes
+                hi = min(done * block_bytes, flat.size)
+                if hi > lo:
+                    flat[lo:hi] = src[lo:hi]
+                sweep_done[si] = done
+        live_snap: Dict[str, np.ndarray] = {}
+        for obj, flat in live_cur.items():
+            dtype, shape = shapes[obj]
+            live_snap[obj] = flat.copy().view(dtype).reshape(shape)
+        live_out[idx] = live_snap
+    return nvm_out, live_out  # type: ignore[return-value]
 
 
 def resolve_live_values(

@@ -1,0 +1,144 @@
+"""Append-only JSONL result store for crash campaigns (resume support).
+
+A campaign writes one header line describing the campaign fingerprint (app,
+plan, cache, seed, test count, engine version), then one line per completed
+*shard* — all crash tests whose crash point falls in the same crash window.
+Shards are the unit of work of the parallel engine and the unit of resume:
+a campaign killed mid-run (fittingly, for this paper) restarts, replays the
+store, and executes only the shards that never landed.
+
+The file is only ever appended to, with a flush per shard, so the worst a
+crash can leave behind is one torn trailing line — the loader tolerates
+exactly that (and nothing else) by discarding undecodable trailing data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import os
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from .crash_tester import CrashRecord
+
+#: bump when the shard record layout changes; mismatching stores are rejected
+STORE_VERSION = 1
+
+
+class CampaignStoreError(RuntimeError):
+    """Raised when a store exists but belongs to a different campaign."""
+
+
+def record_to_dict(record: CrashRecord) -> dict:
+    return dataclasses.asdict(record)
+
+
+def record_from_dict(d: Mapping[str, object]) -> CrashRecord:
+    return CrashRecord(
+        iter_idx=int(d["iter_idx"]),
+        region_idx=int(d["region_idx"]),
+        frac=float(d["frac"]),
+        inconsistency={k: float(v) for k, v in dict(d["inconsistency"]).items()},
+        outcome=str(d["outcome"]),
+        extra_iters=int(d["extra_iters"]),
+        verify_metric=float(d["verify_metric"]),
+    )
+
+
+class CampaignStore:
+    """JSONL store bound to one file path.
+
+    Typical use is through ``CrashTester.run_campaign(store_path=...)``; the
+    class is public so benchmarks can inspect partial campaigns.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+
+    # ------------------------------------------------------------------ read
+    def _read_lines(self) -> List[dict]:
+        if not os.path.exists(self.path):
+            return []
+        out: List[dict] = []
+        with io.open(self.path, "r", encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    out.append(json.loads(line))
+                except json.JSONDecodeError:
+                    # torn line from a crash mid-append: skip it — shard
+                    # lines are self-contained, so the rest of the file is
+                    # still usable (the torn shard just re-executes)
+                    continue
+        return out
+
+    def header(self) -> Optional[dict]:
+        lines = self._read_lines()
+        if lines and lines[0].get("type") == "header":
+            return lines[0]
+        return None
+
+    def completed_shards(self) -> Dict[int, List[Tuple[int, CrashRecord]]]:
+        """shard_id -> [(original test index, record)], later lines win."""
+        shards: Dict[int, List[Tuple[int, CrashRecord]]] = {}
+        for line in self._read_lines():
+            if line.get("type") != "shard":
+                continue
+            shards[int(line["shard"])] = [
+                (int(i), record_from_dict(r)) for i, r in line["records"]
+            ]
+        return shards
+
+    # ----------------------------------------------------------------- write
+    def load_or_create(self, fingerprint: dict) -> Dict[int, List[Tuple[int, CrashRecord]]]:
+        """Validate/initialise the store; return already-completed shards.
+
+        * no file (or empty file): write the header, return ``{}``;
+        * matching header: return the completed shards to skip;
+        * mismatching header: raise :class:`CampaignStoreError` — a store is
+          bound to exactly one campaign, silently mixing results would
+          corrupt the resumed ``CampaignResult``.
+        """
+        existing = self.header()
+        if existing is None:
+            if self._read_lines():
+                raise CampaignStoreError(
+                    f"{self.path}: not a campaign store (no header line)"
+                )
+            d = os.path.dirname(os.path.abspath(self.path))
+            os.makedirs(d, exist_ok=True)
+            self._append({"type": "header", **fingerprint})
+            return {}
+        found = {k: existing.get(k) for k in fingerprint}
+        # compare in JSON space: the header went through a JSON round-trip,
+        # so the live fingerprint must too (tuples become lists, etc.)
+        if found != json.loads(json.dumps(dict(fingerprint))):
+            raise CampaignStoreError(
+                f"{self.path}: store belongs to a different campaign\n"
+                f"  store:    {found}\n  campaign: {fingerprint}"
+            )
+        return self.completed_shards()
+
+    def append_shard(self, shard_id: int, records: List[Tuple[int, CrashRecord]]) -> None:
+        self._append({
+            "type": "shard",
+            "shard": int(shard_id),
+            "records": [(int(i), record_to_dict(r)) for i, r in records],
+        })
+
+    def _append(self, obj: dict) -> None:
+        # a previous crash may have left a torn, unterminated line at EOF —
+        # terminate it first so this append starts a fresh line
+        needs_newline = False
+        if os.path.exists(self.path) and os.path.getsize(self.path) > 0:
+            with io.open(self.path, "rb") as rf:
+                rf.seek(-1, os.SEEK_END)
+                needs_newline = rf.read(1) != b"\n"
+        with io.open(self.path, "a", encoding="utf-8") as f:
+            if needs_newline:
+                f.write("\n")
+            f.write(json.dumps(obj) + "\n")
+            f.flush()
+            os.fsync(f.fileno())

@@ -17,7 +17,8 @@ per-object data-inconsistency rate, which feeds the Spearman selection
 """
 from __future__ import annotations
 
-import dataclasses
+import os
+from concurrent.futures import ProcessPoolExecutor, as_completed
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -30,8 +31,7 @@ from .cache_sim import (
     RegionEvents,
     Sweep,
     WindowTrace,
-    resolve_live_values,
-    resolve_nvm_image,
+    resolve_window_images,
     simulate_window,
 )
 from .regions import IterativeApp, Region, State, VerifyResult, object_blocks
@@ -74,6 +74,17 @@ class CrashRecord:
     outcome: str          # "S1" | "S2" | "S3" | "S4"
     extra_iters: int
     verify_metric: float
+
+
+@dataclass(frozen=True)
+class PlannedTest:
+    """One pre-drawn crash test: campaign randomness is fully resolved up
+    front (same draw order as the historical serial engine), so execution
+    order — serial, sharded, parallel, resumed — cannot change the result."""
+
+    index: int        # position in the campaign (stable output ordering)
+    crash_iter: int   # iteration whose window the crash falls in
+    crash_t: int      # crash time inside the window, in block accesses
 
 
 @dataclass
@@ -135,6 +146,7 @@ class CrashTester:
         self._golden_iters: int = 0
         self._golden_final: Optional[State] = None
         self._window_cache: Dict[int, Tuple[WindowTrace, Dict[int, Dict[str, np.ndarray]], int]] = {}
+        self._iter_time: Optional[int] = None
 
     # ---------------------------------------------------------------- golden
     def _ensure_golden(self) -> None:
@@ -231,17 +243,81 @@ class CrashTester:
         self._window_cache[crash_iter] = result
         return result
 
+    # -------------------------------------------------------------- planning
+    def _iter_access_time(self) -> int:
+        """Block accesses one iteration contributes to a window's clock.
+
+        ``simulate_window`` advances time one unit per swept block (hot
+        refreshes and flushes are free), so window span boundaries are pure
+        arithmetic over object sizes — campaign planning never needs to
+        simulate a window.
+        """
+        if self._iter_time is not None:
+            return self._iter_time
+        self._ensure_golden()
+        state0 = self._golden_states[0]
+        tracked = self._tracked_objects(state0)
+        blocks = object_blocks(state0, tracked, self.cache.block_bytes)
+        total = 0
+        for region in self.app.regions():
+            hot = tuple(region.hot_reads)
+            for o in region.reads:
+                if o not in hot and o in blocks:
+                    total += blocks[o]
+            for o in region.writes:
+                if o in blocks:
+                    total += blocks[o]
+        self._iter_time = total
+        return total
+
+    def _window_bounds(self, crash_iter: int) -> Tuple[int, int]:
+        """(t_lo, t_end) of the crash span: the window is iterations
+        [crash_iter-1, crash_iter] and crash times are drawn from the last."""
+        it_t = self._iter_access_time()
+        if crash_iter >= 1:
+            return it_t, 2 * it_t
+        return 0, it_t
+
+    def plan_campaign(self, n_tests: int, seed: Optional[int] = None) -> List[PlannedTest]:
+        """Pre-draw every crash point with the campaign RNG.
+
+        The draw order (crash iteration, then crash time within the
+        iteration's window) is exactly the historical serial engine's, so a
+        planned campaign at ``n_workers=1`` reproduces it bit-for-bit.
+        """
+        self._ensure_golden()
+        rng = np.random.default_rng(self.seed if seed is None else seed)
+        tests: List[PlannedTest] = []
+        for i in range(n_tests):
+            crash_iter = int(rng.integers(0, self._golden_iters))
+            t_lo, t_end = self._window_bounds(crash_iter)
+            tests.append(PlannedTest(i, crash_iter, int(rng.integers(t_lo, t_end))))
+        return tests
+
     # ----------------------------------------------------------------- tests
     def run_one(self, rng: np.random.Generator) -> CrashRecord:
         self._ensure_golden()
-        app = self.app
-        golden_iters = self._golden_iters
-        crash_iter = int(rng.integers(0, golden_iters))
-        trace, seq_values, t_lo = self._simulate_crash_window(crash_iter)
-        crash_t = int(rng.integers(t_lo, trace.t_end))
-        seq, it, region_idx, t0, t1 = trace.span_for_time(crash_t)
-        frac = (crash_t - t0) / max(1, (t1 - t0))
+        crash_iter = int(rng.integers(0, self._golden_iters))
+        t_lo, t_end = self._window_bounds(crash_iter)
+        crash_t = int(rng.integers(t_lo, t_end))
+        (_, record), = self.run_window_tests(
+            crash_iter, [PlannedTest(0, crash_iter, crash_t)]
+        )
+        return record
 
+    def run_window_tests(
+        self, crash_iter: int, tests: Sequence[PlannedTest]
+    ) -> List[Tuple[int, CrashRecord]]:
+        """Execute all planned tests of one crash window (one shard).
+
+        The window is simulated once and **all** its crash points are
+        resolved in a single vectorial pass over the window's write-back
+        records (:func:`resolve_window_images`); only the per-test restart
+        and classification remain per-crash work.
+        """
+        self._ensure_golden()
+        app = self.app
+        trace, seq_values, _ = self._simulate_crash_window(crash_iter)
         first = max(0, crash_iter - 1)
         start_values = {
             o: self._golden_states[first][o]
@@ -250,39 +326,43 @@ class CrashTester:
         }
         candidates = [o for o in app.candidates if o in start_values]
         chronic = self._chronic_base(candidates, crash_iter) if crash_iter >= 1 else None
-        nvm = resolve_nvm_image(
-            trace, crash_t,
+        nvms, lives = resolve_window_images(
+            trace, [t.crash_t for t in tests],
             {o: start_values[o] for o in candidates},
             seq_values, self.cache.block_bytes,
             chronic_base=chronic,
         )
-        live = resolve_live_values(
-            trace, crash_t,
-            {o: start_values[o] for o in candidates},
-            seq_values, self.cache.block_bytes,
-        )
-        inconsistency = {o: inconsistent_rate(nvm[o], live[o]) for o in candidates}
 
-        # All candidates restart from the NVM image (paper §5.1: "the
-        # candidates are directly read from NVM"); the plan only controls
-        # which get *flushed* (and therefore how consistent they are).  The
-        # loop iterator is always flushed at iteration end (paper fn. 3), so
-        # its NVM value is the bookmarked restart iteration, not the torn
-        # cache-model value.
-        persisted = dict(nvm)
-        if app.iterator_object and app.iterator_object in persisted:
-            bookmark = np.asarray(persisted[app.iterator_object])
-            persisted[app.iterator_object] = np.full_like(bookmark, crash_iter)
-        outcome, extra, metric = self._restart_and_classify(persisted, crash_iter)
-        return CrashRecord(
-            iter_idx=crash_iter,
-            region_idx=region_idx,
-            frac=float(frac),
-            inconsistency=inconsistency,
-            outcome=outcome,
-            extra_iters=extra,
-            verify_metric=metric,
-        )
+        out: List[Tuple[int, CrashRecord]] = []
+        for test, nvm, live in zip(tests, nvms, lives):
+            seq, it, region_idx, t0, t1 = trace.span_for_time(test.crash_t)
+            frac = (test.crash_t - t0) / max(1, (t1 - t0))
+            inconsistency = {o: inconsistent_rate(nvm[o], live[o]) for o in candidates}
+
+            # All candidates restart from the NVM image (paper §5.1: "the
+            # candidates are directly read from NVM"); the plan only controls
+            # which get *flushed* (and therefore how consistent they are).
+            # The loop iterator is always flushed at iteration end (paper
+            # fn. 3), so its NVM value is the bookmarked restart iteration,
+            # not the torn cache-model value.
+            persisted = dict(nvm)
+            if app.iterator_object and app.iterator_object in persisted:
+                bookmark = np.asarray(persisted[app.iterator_object])
+                persisted[app.iterator_object] = np.full_like(bookmark, crash_iter)
+            outcome, extra, metric = self._restart_and_classify(persisted, crash_iter)
+            out.append((
+                test.index,
+                CrashRecord(
+                    iter_idx=crash_iter,
+                    region_idx=region_idx,
+                    frac=float(frac),
+                    inconsistency=inconsistency,
+                    outcome=outcome,
+                    extra_iters=extra,
+                    verify_metric=metric,
+                ),
+            ))
+        return out
 
     def _chronic_base(self, candidates, crash_iter: int) -> Dict[str, np.ndarray]:
         """Steady-state base values for chronically-cached blocks: the last
@@ -338,13 +418,141 @@ class CrashTester:
         except Exception:
             return "S3", 0, float("nan")
 
-    def run_campaign(self, n_tests: int, seed: Optional[int] = None) -> CampaignResult:
-        rng = np.random.default_rng(self.seed if seed is None else seed)
-        records = [self.run_one(rng) for _ in range(n_tests)]
-        # steady-state write accounting from the last simulated window
+    # -------------------------------------------------------------- campaign
+    def _state_digest(self) -> str:
+        """Digest of the golden run's initial state: distinguishes same-named
+        apps with different problem configurations (grid, tolerance, data
+        seed), whose crash records must never be mixed in one store."""
+        import hashlib
+
+        self._ensure_golden()
+        h = hashlib.sha256()
+        for name in sorted(self._golden_states[0]):
+            arr = np.ascontiguousarray(self._golden_states[0][name])
+            h.update(name.encode())
+            h.update(str(arr.dtype).encode())
+            h.update(str(arr.shape).encode())
+            h.update(arr.tobytes())
+        return h.hexdigest()[:16]
+
+    def _fingerprint(self, n_tests: int, seed: int) -> Dict[str, object]:
+        """Identity of a campaign for the resume store: any change here means
+        stored shard results are not reusable.  Values must survive a JSON
+        round-trip unchanged (the store compares the parsed header against
+        this dict), so: only str/int/float/bool, lists of lists — no tuples.
+        """
+        return {
+            "store_version": 1,
+            "app": self.app.name,
+            "state_digest": self._state_digest(),
+            "n_tests": int(n_tests),
+            "seed": int(seed),
+            "golden_iters": int(self.golden_iters),
+            "plan_objects": list(self.plan.objects),
+            "plan_freq": sorted([int(k), int(v)] for k, v in self.plan.region_freq.items()),
+            "cache_blocks": int(self.cache.capacity_blocks),
+            "block_bytes": int(self.cache.block_bytes),
+            "max_extra_factor": float(self.max_extra_factor),
+        }
+
+    def _shards(self, tests: Sequence[PlannedTest]) -> Dict[int, List[PlannedTest]]:
+        """Group planned tests by crash window; the shard id is the window's
+        crash iteration.  Within a shard tests keep campaign order."""
+        shards: Dict[int, List[PlannedTest]] = {}
+        for t in tests:
+            shards.setdefault(t.crash_iter, []).append(t)
+        return shards
+
+    def run_campaign(
+        self,
+        n_tests: int,
+        seed: Optional[int] = None,
+        n_workers: int = 1,
+        store_path: Optional[str] = None,
+    ) -> CampaignResult:
+        """Run a crash-test campaign.
+
+        * ``n_workers > 1`` fans the campaign's shards (one per crash
+          window) out over a :class:`~concurrent.futures.ProcessPoolExecutor`.
+          All randomness is pre-drawn by :meth:`plan_campaign`, so the result
+          is identical for every worker count — and ``n_workers=1`` (which
+          runs fully in-process) is bit-for-bit the historical serial engine.
+        * ``store_path`` appends each completed shard to a JSONL
+          :class:`~repro.core.campaign_store.CampaignStore`; re-running the
+          same campaign against an existing (possibly truncated) store
+          executes only the missing shards.
+        """
+        eff_seed = self.seed if seed is None else seed
+        tests = self.plan_campaign(n_tests, eff_seed)
+        shards = self._shards(tests)
+
+        store = None
+        done: Dict[int, List[Tuple[int, CrashRecord]]] = {}
+        if store_path is not None:
+            from .campaign_store import CampaignStore
+
+            store = CampaignStore(store_path)
+            done = store.load_or_create(self._fingerprint(n_tests, eff_seed))
+            done = {k: v for k, v in done.items() if k in shards}
+        pending = {ci: ts for ci, ts in shards.items() if ci not in done}
+
+        results: Dict[int, List[Tuple[int, CrashRecord]]] = dict(done)
+        if n_workers > 1 and len(pending) > 1:
+            # apps that hold jitted closures (e.g. LMTrainApp) cannot cross a
+            # process boundary; fall back to the identical serial engine
+            import pickle
+            import warnings
+
+            try:
+                pickle.dumps((self.app, self.plan, self.cache))
+            except Exception as e:  # noqa: BLE001 - any pickling failure
+                warnings.warn(
+                    f"{self.app.name}: campaign payload is not picklable "
+                    f"({e!r}); running shards serially", RuntimeWarning,
+                    stacklevel=2,
+                )
+                n_workers = 1
+        if n_workers <= 1 or len(pending) <= 1:
+            for ci, ts in pending.items():
+                recs = self.run_window_tests(ci, ts)
+                if store is not None:
+                    store.append_shard(ci, recs)
+                results[ci] = recs
+        else:
+            import multiprocessing as mp
+
+            # spawn, not fork: jax is multithreaded and forked children
+            # deadlock (REPRO_MP_START exists for non-jax substrates only)
+            ctx = mp.get_context(os.environ.get("REPRO_MP_START", "spawn"))
+            with ProcessPoolExecutor(
+                max_workers=min(n_workers, len(pending)),
+                mp_context=ctx,
+                initializer=_shard_worker_init,
+                initargs=(self.app, self.plan, self.cache, self.seed,
+                          self.max_extra_factor),
+            ) as ex:
+                futs = {
+                    ex.submit(_shard_worker_run, ci, ts): ci
+                    for ci, ts in pending.items()
+                }
+                for fut in as_completed(futs):
+                    ci, recs = fut.result()
+                    if store is not None:
+                        store.append_shard(ci, recs)
+                    results[ci] = recs
+
+        indexed = sorted(
+            (pair for recs in results.values() for pair in recs),
+            key=lambda pair: pair[0],
+        )
+        records = [r for _, r in indexed]
+
+        # steady-state write accounting from the first test's crash window
+        # (matches the historical engine, whose first simulated window was
+        # the first test's)
         stats: Dict[str, float] = {}
-        if self._window_cache:
-            trace, _, _ = next(iter(self._window_cache.values()))
+        if tests:
+            trace, _, _ = self._simulate_crash_window(tests[0].crash_iter)
             n_iters_in_window = 2
             stats = {
                 "eviction_writes_per_iter": trace.eviction_writes / n_iters_in_window,
@@ -359,3 +567,30 @@ class CrashTester:
             golden_iters=self._golden_iters,
             window_write_stats=stats,
         )
+
+
+# ------------------------------------------------------------- worker plumbing
+# One CrashTester per worker process, built by the pool initializer: the
+# golden run and window simulations are paid once per process, then amortised
+# across every shard that process executes.
+_WORKER_TESTER: Optional[CrashTester] = None
+
+
+def _shard_worker_init(
+    app: IterativeApp,
+    plan: PersistPlan,
+    cache: CacheConfig,
+    seed: int,
+    max_extra_factor: float,
+) -> None:
+    global _WORKER_TESTER
+    _WORKER_TESTER = CrashTester(
+        app, plan, cache, seed=seed, max_extra_factor=max_extra_factor
+    )
+
+
+def _shard_worker_run(
+    crash_iter: int, tests: Sequence[PlannedTest]
+) -> Tuple[int, List[Tuple[int, CrashRecord]]]:
+    assert _WORKER_TESTER is not None, "worker used before initialization"
+    return crash_iter, _WORKER_TESTER.run_window_tests(crash_iter, tests)

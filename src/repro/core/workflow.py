@@ -121,8 +121,13 @@ def run_workflow(
     freq_options: Sequence[int] = (1, 2, 4, 8),
     seed: int = 0,
     region_measure: str = "isolated",
+    n_workers: int = 1,
 ) -> WorkflowResult:
     """Steps 1–3.
+
+    ``n_workers`` is handed to every campaign the workflow runs
+    (:meth:`repro.core.crash_tester.CrashTester.run_campaign`); results are
+    identical for every worker count.
 
     ``region_measure`` selects how c_k^max is estimated:
 
@@ -137,7 +142,9 @@ def run_workflow(
     tau = tau_threshold(system, t_s=t_s)
 
     # Step 1: baseline campaign (NVM holds whatever eviction left there).
-    baseline = CrashTester(app, PersistPlan.none(), cache, seed=seed).run_campaign(n_tests)
+    baseline = CrashTester(app, PersistPlan.none(), cache, seed=seed).run_campaign(
+        n_tests, n_workers=n_workers
+    )
 
     # Step 2: Spearman object selection.  The loop iterator is excluded: it
     # is *always* persisted (paper fn. 3), never subject to selection.
@@ -158,7 +165,9 @@ def run_workflow(
     a = region_time_fractions(app, cache.block_bytes)
     l = estimate_region_overheads(app, crit, block_bytes=cache.block_bytes)
     best_plan = PersistPlan.best(crit, app)
-    best = CrashTester(app, best_plan, cache, seed=seed + 1).run_campaign(n_tests)
+    best = CrashTester(app, best_plan, cache, seed=seed + 1).run_campaign(
+        n_tests, n_workers=n_workers
+    )
 
     if region_measure == "paper":
         c_base_map = baseline.per_region_recomputability()
@@ -175,7 +184,9 @@ def run_workflow(
         per_region_n = max(30, n_tests // 2)
         for k in range(n_regions):
             plan_k = PersistPlan(objects=crit, region_freq={k: 1})
-            camp_k = CrashTester(app, plan_k, cache, seed=seed + 2 + k).run_campaign(per_region_n)
+            camp_k = CrashTester(app, plan_k, cache, seed=seed + 2 + k).run_campaign(
+                per_region_n, n_workers=n_workers
+            )
             gains[k] = camp_k.recomputability - baseline.recomputability
             overheads[k] = l[k]
         sel = select_regions_from_gains(

@@ -7,6 +7,8 @@ from .heat import HeatApp
 from .kmeans import KMeansApp
 from .mg import MGApp
 from .montecarlo import MonteCarloApp
+from .pagerank import PageRankApp
+from .sor import SORApp
 
 _REGISTRY = {
     "cg": CGApp,
@@ -14,6 +16,8 @@ _REGISTRY = {
     "kmeans": KMeansApp,
     "montecarlo": MonteCarloApp,
     "heat": HeatApp,
+    "sor": SORApp,
+    "pagerank": PageRankApp,
 }
 
 
@@ -30,4 +34,7 @@ def get_app(name: str, **kwargs) -> IterativeApp:
     return cls(**kwargs)
 
 
-__all__ = ["get_app", "app_names", "CGApp", "MGApp", "KMeansApp", "MonteCarloApp", "HeatApp"]
+__all__ = [
+    "get_app", "app_names", "CGApp", "MGApp", "KMeansApp", "MonteCarloApp",
+    "HeatApp", "SORApp", "PageRankApp",
+]

@@ -1,0 +1,115 @@
+"""PageRank: damped power iteration on a random directed graph.
+
+Analogue of an irregular graph-analytics workload (the paper's spectrum
+beyond the NPB kernels).  The link matrix is column-stochastic and dense at
+suite sizes; one main-loop iteration is spmv -> damped apply -> bookkeeping.
+The rank vector is re-read continuously while the matvec streams the link
+matrix, so it is *hot* in the NVCT cache model — like the k-means centroid
+table, it tends to stay chronically dirty and leave only ancient values in
+NVM (paper §8), which is exactly what makes it a critical data object.
+
+Power iteration contracts at the damping factor per step, so early crashes
+recompute for free while late crashes lack the remaining iterations to
+re-absorb a stale rank vector (S2 territory).
+
+Acceptance verification: fixed-point residual ||G(rank) - rank||_1 below
+tolerance, where G is the damped update (math-invariant check, §2.2).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.regions import IterativeApp, Region, State, VerifyResult
+
+
+@jax.jit
+def _spmv(links: jnp.ndarray, rank: jnp.ndarray) -> jnp.ndarray:
+    return links @ rank
+
+
+@jax.jit
+def _damped(y: jnp.ndarray, rank: jnp.ndarray, damping: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    n = rank.shape[0]
+    new = damping * y + (1.0 - damping) / n
+    return new, jnp.sum(jnp.abs(new - rank))
+
+
+class PageRankApp(IterativeApp):
+    name = "pagerank"
+    candidates = ("rank", "y", "k")
+
+    def __init__(self, n_nodes: int = 256, out_degree: int = 3, damping: float = 0.9,
+                 tol: float = 1e-5, n_iters: int = 100, seed: int = 0):
+        self.n_nodes = n_nodes
+        self.out_degree = out_degree
+        self.damping = damping
+        self.tol = tol
+        self.n_iters = n_iters
+        self._seed = seed
+
+    def init(self, seed: int = 0) -> State:
+        n = self.n_nodes
+        rng = np.random.default_rng(self._seed)
+        links = np.zeros((n, n), np.float32)
+        for j in range(n):
+            targets = rng.choice(n, size=self.out_degree, replace=False)
+            links[targets, j] = 1.0 / self.out_degree
+        return {
+            "links": links,                          # read-only
+            "rank": np.full(n, 1.0 / n, np.float32),
+            "y": np.zeros(n, np.float32),            # temporal
+            "delta": np.zeros(1, np.float32),        # temporal diagnostic
+            "k": np.zeros(1, np.int64),
+        }
+
+    def _region_spmv(self, s: State) -> State:
+        s = dict(s)
+        s["y"] = np.asarray(_spmv(jnp.asarray(s["links"]), jnp.asarray(s["rank"])))
+        return s
+
+    def _region_apply(self, s: State) -> State:
+        s = dict(s)
+        new, delta = _damped(jnp.asarray(s["y"]), jnp.asarray(s["rank"]), self.damping)
+        s["rank"] = np.asarray(new)
+        s["delta"] = np.asarray(delta).reshape(1).astype(np.float32)
+        return s
+
+    def _region_book(self, s: State) -> State:
+        s = dict(s)
+        s["k"] = s["k"] + 1
+        return s
+
+    def regions(self) -> Tuple[Region, ...]:
+        return (
+            Region("spmv", self._region_spmv, writes=("y",),
+                   reads=("links", "rank"), cost=4.0, hot_reads=("rank",)),
+            Region("apply", self._region_apply, writes=("rank", "delta"),
+                   reads=("y", "rank"), cost=1.0),
+            Region("book", self._region_book, writes=("k",), cost=0.1),
+        )
+
+    def _fixed_point_residual(self, state: State) -> float:
+        y = np.asarray(_spmv(jnp.asarray(state["links"]), jnp.asarray(state["rank"])))
+        target = self.damping * y + (1.0 - self.damping) / self.n_nodes
+        return float(np.abs(target - state["rank"]).sum())
+
+    def verify(self, state: State) -> VerifyResult:
+        r = self._fixed_point_residual(state)
+        return VerifyResult(bool(np.isfinite(r) and r < self.tol), r)
+
+    def progress(self, state: State) -> float:
+        return self._fixed_point_residual(state)
+
+    def converged(self, state: State, it: int) -> bool:
+        if it >= self.n_iters:
+            return True
+        delta = float(state["delta"][0])
+        if not np.isfinite(delta):
+            raise FloatingPointError("pagerank blow-up")
+        # delta is ||G(rank_prev) - rank_prev||_1's damped successor; the
+        # true fixed-point residual is only asserted by verify()
+        return 0 < delta < self.tol * 0.5

@@ -24,6 +24,8 @@ CI_SIZES: Dict[str, dict] = {
     "kmeans": dict(n_points=600, n_iters=8),
     "montecarlo": dict(batch=1024, n_iters=10),
     "heat": dict(grid=32, n_iters=300),
+    "sor": dict(grid=24, n_iters=120),
+    "pagerank": dict(n_nodes=192, n_iters=100),
 }
 
 #: benchmark-sized instances (paper-figure campaigns, minutes-scale)
@@ -33,6 +35,8 @@ BENCH_SIZES: Dict[str, dict] = {
     "kmeans": dict(n_points=4000, n_iters=10),
     "montecarlo": dict(batch=8192, n_iters=24),
     "heat": dict(grid=48, n_iters=600),
+    "sor": dict(grid=48, n_iters=240),
+    "pagerank": dict(n_nodes=512, n_iters=120),
 }
 
 

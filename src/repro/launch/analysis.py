@@ -135,6 +135,8 @@ def roofline_from_compiled(
     from .hlo_cost import analyze_hlo
 
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jaxlib wraps the dict in a list
+        ca = ca[0] if ca else {}
     flops_raw = float(ca.get("flops", 0.0))
     bytes_raw = float(ca.get("bytes accessed", 0.0))
     hc = analyze_hlo(compiled.as_text())

@@ -18,8 +18,8 @@ def _mk(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
         return jax.make_mesh(
             shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
         )
-    except TypeError:  # older jax without axis_types
-        return jax.make_mesh(shape, axes)
+    except (TypeError, AttributeError):  # older jax: no axis_types kwarg /
+        return jax.make_mesh(shape, axes)  # no jax.sharding.AxisType at all
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -1,5 +1,6 @@
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (pip install -e .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.blocks import (

@@ -1,6 +1,7 @@
 """Cache-model correctness: event simulation vs a brute-force reference."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (pip install -e .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cache_sim import (

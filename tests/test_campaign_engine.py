@@ -1,0 +1,236 @@
+"""Parallel, resumable campaign engine: determinism, parity, resume, batching."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import CrashTester, PersistPlan
+from repro.core.campaign_store import CampaignStore, CampaignStoreError
+from repro.core.cache_sim import (
+    CacheConfig,
+    Flush,
+    RegionEvents,
+    Sweep,
+    resolve_live_values,
+    resolve_nvm_image,
+    resolve_window_images,
+    simulate_window,
+)
+from repro.hpc.suite import ci_app, default_cache
+
+
+@pytest.fixture(scope="module")
+def mg_setup():
+    app = ci_app("mg")
+    return app, default_cache(app)
+
+
+def _dicts(campaign):
+    return [dataclasses.asdict(r) for r in campaign.records]
+
+
+# ------------------------------------------------------------------ determinism
+def test_campaign_deterministic(mg_setup):
+    app, cache = mg_setup
+    a = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(8)
+    b = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(8)
+    assert _dicts(a) == _dicts(b)
+    assert a.window_write_stats == b.window_write_stats
+
+
+def test_plan_bounds_match_simulated_window(mg_setup):
+    """The planner's arithmetic window clock must agree with the simulator's
+    (this is what lets planning pre-draw crash times without simulating)."""
+    app, cache = mg_setup
+    tester = CrashTester(app, PersistPlan.none(), cache, seed=0)
+    for crash_iter in {0, 1, tester.golden_iters // 2, tester.golden_iters - 1}:
+        t_lo, t_end = tester._window_bounds(crash_iter)
+        trace, _, span_start = tester._simulate_crash_window(crash_iter)
+        assert (t_lo, t_end) == (span_start, trace.t_end), crash_iter
+
+
+@pytest.mark.slow
+def test_parallel_matches_serial(mg_setup):
+    """n_workers=1 is the serial engine; n_workers=4 must match it exactly
+    (same seed -> same S1-S4 outcomes and per-object inconsistency rates)."""
+    app, cache = mg_setup
+    serial = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(12)
+    par = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+        12, n_workers=4
+    )
+    assert _dicts(serial) == _dicts(par)
+    assert serial.class_fractions() == par.class_fractions()
+    assert serial.window_write_stats == par.window_write_stats
+
+
+def test_unpicklable_app_falls_back_to_serial(mg_setup):
+    app, cache = mg_setup
+    serial = CrashTester(app, PersistPlan.none(), cache, seed=5).run_campaign(6)
+    broken = ci_app("mg")
+    broken.unpicklable = lambda: None  # lambdas cannot cross a process boundary
+    with pytest.warns(RuntimeWarning, match="not picklable"):
+        camp = CrashTester(broken, PersistPlan.none(), cache, seed=5).run_campaign(
+            6, n_workers=4
+        )
+    assert _dicts(camp) == _dicts(serial)
+
+
+# ----------------------------------------------------------------------- store
+def test_resume_completes_truncated_store(mg_setup, tmp_path):
+    app, cache = mg_setup
+    path = str(tmp_path / "campaign.jsonl")
+    full = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+        12, store_path=path
+    )
+    lines = open(path).read().splitlines()
+    n_shards = len(lines) - 1  # minus header
+    assert n_shards >= 2
+
+    # kill mid-run: keep the header + 2 complete shards + one torn line
+    with open(path, "w") as f:
+        f.write("\n".join(lines[:3]) + "\n" + lines[3][: len(lines[3]) // 2])
+
+    executed = []
+    orig = CrashTester.run_window_tests
+
+    def counting(self, crash_iter, tests):
+        executed.append(crash_iter)
+        return orig(self, crash_iter, tests)
+
+    CrashTester.run_window_tests = counting
+    try:
+        resumed = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+            12, store_path=path
+        )
+    finally:
+        CrashTester.run_window_tests = orig
+
+    assert _dicts(resumed) == _dicts(full)
+    # only the missing shards ran: 2 complete shards came from the store, the
+    # torn third line was discarded and re-executed
+    assert len(set(executed)) == n_shards - 2
+
+    # a completed store resumes to the same result with zero shards executed
+    executed.clear()
+    CrashTester.run_window_tests = counting
+    try:
+        again = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+            12, store_path=path
+        )
+    finally:
+        CrashTester.run_window_tests = orig
+    assert _dicts(again) == _dicts(full)
+    assert executed == []
+
+
+def test_resume_with_flush_plan(mg_setup, tmp_path):
+    """Fingerprints with a non-empty region_freq must survive the JSON
+    round-trip (tuples vs lists) and resume cleanly."""
+    app, cache = mg_setup
+    plan = PersistPlan.at_loop_end(("u",), app)
+    path = str(tmp_path / "campaign.jsonl")
+    full = CrashTester(app, plan, cache, seed=3).run_campaign(6, store_path=path)
+    again = CrashTester(app, plan, cache, seed=3).run_campaign(6, store_path=path)
+    assert _dicts(again) == _dicts(full)
+
+
+def test_store_rejects_same_app_different_config(mg_setup, tmp_path):
+    """Two campaigns on the same app *name* but different problem data must
+    not share a store (the state digest tells them apart)."""
+    app, cache = mg_setup
+    path = str(tmp_path / "campaign.jsonl")
+    CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+        4, store_path=path
+    )
+    other = ci_app("mg", seed=9)  # same name/sizes, different problem data
+    with pytest.raises(CampaignStoreError):
+        CrashTester(other, PersistPlan.none(), cache, seed=3).run_campaign(
+            4, store_path=path
+        )
+
+
+def test_store_rejects_foreign_campaign(mg_setup, tmp_path):
+    app, cache = mg_setup
+    path = str(tmp_path / "campaign.jsonl")
+    CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+        6, store_path=path
+    )
+    with pytest.raises(CampaignStoreError):
+        CrashTester(app, PersistPlan.none(), cache, seed=4).run_campaign(
+            6, store_path=path
+        )
+    with pytest.raises(CampaignStoreError):
+        CrashTester(
+            app, PersistPlan.at_loop_end(("u",), app), cache, seed=3
+        ).run_campaign(6, store_path=path)
+
+
+def test_store_roundtrip_preserves_records(mg_setup, tmp_path):
+    app, cache = mg_setup
+    path = str(tmp_path / "campaign.jsonl")
+    camp = CrashTester(app, PersistPlan.none(), cache, seed=7).run_campaign(
+        6, store_path=path
+    )
+    shards = CampaignStore(path).completed_shards()
+    stored = sorted(
+        (pair for recs in shards.values() for pair in recs), key=lambda p: p[0]
+    )
+    assert [dataclasses.asdict(r) for _, r in stored] == _dicts(camp)
+    assert os.path.exists(path)
+
+
+# ------------------------------------------------------------- batch resolution
+def _random_window(rng, n_objs=3, n_regions=6, block_bytes=16):
+    names = [f"o{i}" for i in range(n_objs)]
+    obj_blocks = {o: int(rng.integers(1, 12)) for o in names}
+    values = {
+        o: rng.standard_normal(obj_blocks[o] * block_bytes // 4).astype(np.float32)
+        for o in names
+    }
+    regions = []
+    seq_values = {}
+    for seq in range(n_regions):
+        events = []
+        for o in names:
+            if rng.random() < 0.5:
+                events.append(Sweep(o, write=False))
+        writes = [o for o in names if rng.random() < 0.6] or [names[0]]
+        for o in writes:
+            events.append(Sweep(o, write=True))
+        if rng.random() < 0.3:
+            events.append(Flush(str(rng.choice(names))))
+        regions.append(RegionEvents(seq=seq, iter_idx=seq // 3, region_idx=seq % 3,
+                                    events=tuple(events)))
+        seq_values[seq] = {
+            o: rng.standard_normal(values[o].size).astype(np.float32) for o in writes
+        }
+    trace = simulate_window(CacheConfig(capacity_blocks=int(rng.integers(2, 20)),
+                                        block_bytes=block_bytes),
+                            obj_blocks, regions)
+    return trace, values, seq_values, block_bytes
+
+
+def test_batch_resolution_matches_single_shot():
+    """resolve_window_images == per-crash-time single-shot resolution, for
+    random event traces, with and without a chronic base image."""
+    rng = np.random.default_rng(0)
+    for trial in range(8):
+        trace, values, seq_values, bb = _random_window(rng)
+        if trace.t_end < 2:
+            continue
+        crash_ts = sorted(rng.integers(0, trace.t_end, size=7).tolist(),
+                          key=lambda _: rng.random())  # deliberately unsorted
+        chronic = None
+        if trial % 2:
+            chronic = {o: np.full_like(v, 7.5) for o, v in values.items()}
+        nvms, lives = resolve_window_images(
+            trace, crash_ts, values, seq_values, bb, chronic_base=chronic
+        )
+        for ct, nvm, live in zip(crash_ts, nvms, lives):
+            ref_nvm = resolve_nvm_image(trace, ct, values, seq_values, bb,
+                                        chronic_base=chronic)
+            ref_live = resolve_live_values(trace, ct, values, seq_values, bb)
+            for o in values:
+                np.testing.assert_array_equal(nvm[o], ref_nvm[o], err_msg=f"nvm {o} t={ct}")
+                np.testing.assert_array_equal(live[o], ref_live[o], err_msg=f"live {o} t={ct}")

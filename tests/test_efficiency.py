@@ -1,6 +1,7 @@
 import math
 
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (pip install -e .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.efficiency import (

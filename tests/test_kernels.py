@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (pip install -e .[dev])")
+pytest.importorskip("jax.experimental.pallas", reason="kernel tests need a Pallas-capable jax build")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.delta_snapshot.ops import dirty_block_mask
@@ -13,6 +15,8 @@ from repro.kernels.rglru_scan.ops import rglru_scan
 from repro.kernels.rglru_scan.ref import rglru_reference
 from repro.kernels.rwkv6_scan.ops import rwkv6_scan
 from repro.kernels.rwkv6_scan.ref import rwkv6_reference
+
+pytestmark = pytest.mark.kernel
 
 
 # ------------------------------------------------------------ flash attention
