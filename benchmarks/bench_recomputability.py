@@ -5,6 +5,12 @@ improvements (Fig 6): + critical-object selection at loop end, + selected
 code regions (the full workflow plan), and the costly best-achievable
 upper bound.  Also reports the headline "fraction of failed crashes
 transformed into correct recomputation".
+
+``--fault-sweep`` runs the scenario-diversity extension instead: every
+registered fault model (:mod:`repro.core.faults`) against each app of
+``FAULT_SWEEP_APPS``, emitting per-model S1–S4 breakdowns with and without
+loop-end persistence — how far does the paper's headline claim survive once
+"a crash" stops meaning one clean power failure?
 """
 from __future__ import annotations
 
@@ -87,5 +93,51 @@ def run(fast: bool = True):
     return rows
 
 
+def fault_sweep(fast: bool = True):
+    """Per-fault-model S1–S4 breakdowns across the fault-sweep apps."""
+    from repro.core import CrashTester, PersistPlan
+    from repro.core.faults import FAULT_MODELS, get_fault_model
+    from repro.hpc.suite import FAULT_SWEEP_APPS, bench_app, ci_app, default_cache
+
+    n = max(24, campaign_size(fast) // 2)
+    workers = campaign_workers()
+    rows = []
+    for name in FAULT_SWEEP_APPS:
+        app = ci_app(name) if fast else bench_app(name)
+        cache = default_cache(app)
+        persist = [c for c in app.candidates if c != app.iterator_object]
+        for model_name in sorted(FAULT_MODELS):
+            fault = get_fault_model(model_name, app=app)
+            with Timer() as t:
+                base = CrashTester(
+                    app, PersistPlan.none(), cache, seed=0, fault=fault
+                ).run_campaign(n, n_workers=workers)
+                ec = CrashTester(
+                    app, PersistPlan.at_loop_end(persist, app), cache, seed=0,
+                    fault=fault,
+                ).run_campaign(n, n_workers=workers)
+            fr = base.class_fractions()
+            rows.append({
+                "app": name,
+                "fault_model": model_name,
+                "S1": round(fr["S1"], 3),
+                "S2": round(fr["S2"], 3),
+                "S3": round(fr["S3"], 3),
+                "S4": round(fr["S4"], 3),
+                "recomp_easycrash": round(ec.recomputability, 3),
+                "seconds": round(t.dt, 1),
+            })
+    emit(rows, "fault_sweep")
+    return rows
+
+
 if __name__ == "__main__":
-    run(fast=True)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fault-sweep", action="store_true",
+                    help="per-fault-model S1-S4 breakdowns instead of Fig 3/6")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-sized campaigns (default: fast CI sizes)")
+    args = ap.parse_args()
+    (fault_sweep if args.fault_sweep else run)(fast=not args.full)

@@ -1,6 +1,6 @@
 """Benchmark harness: one module per paper table/figure.
 
-  bench_recomputability — Fig 3 + Fig 6
+  bench_recomputability — Fig 3 + Fig 6 (and the fault-model sweep)
   bench_selection       — Fig 4a/4b + Fig 5
   bench_persist_overhead— Table 4
   bench_nvm_writes      — Fig 9
@@ -38,6 +38,7 @@ def main() -> None:
 
     benches = [
         ("recomputability", bench_recomputability.run),
+        ("fault_sweep", bench_recomputability.fault_sweep),
         ("selection", bench_selection.run),
         ("persist_overhead", bench_persist_overhead.run),
         ("nvm_writes", bench_nvm_writes.run),

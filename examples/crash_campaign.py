@@ -8,9 +8,16 @@ results to a JSONL store with ``--store PATH``: kill the campaign mid-run,
 re-run the same command, and only the missing shards execute (results are
 identical to an uninterrupted run, for any worker count).
 
+``--fault-model`` swaps what a "crash" is (repro.core.faults): torn-write
+tears in-flight cachelines, multi-crash re-crashes the recovery run,
+bit-flip injects silent corruption, correlated-region concentrates failures
+in the heaviest code region.  The store fingerprint includes the model, so a
+resumed store refuses a different one.
+
 Usage:  PYTHONPATH=src python examples/crash_campaign.py [--arch rwkv6-3b]
                                                          [--workers 4]
                                                          [--store camp.jsonl]
+                                                         [--fault-model torn-write]
 """
 import argparse
 import os
@@ -22,6 +29,7 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core import CacheConfig, CrashTester, PersistPlan
+from repro.core.faults import FAULT_MODELS, get_fault_model
 from repro.core.selection import select_objects
 from repro.models.train_app import LMTrainApp
 
@@ -37,17 +45,23 @@ def main() -> None:
     ap.add_argument("--store", default=None, metavar="PATH",
                     help="JSONL shard store; an interrupted campaign resumes "
                          "from it and executes only the missing shards")
+    ap.add_argument("--fault-model", default="power-fail",
+                    choices=sorted(FAULT_MODELS),
+                    help="failure model for the campaign (default: the "
+                         "paper's clean power failure)")
     args = ap.parse_args()
 
     app = LMTrainApp(base=get_arch(args.arch), n_iters=args.iters,
                      loss_band=args.loss_band)
+    fault = get_fault_model(args.fault_model, app=app)
     state = app.init(0)
     ws_blocks = sum(v.nbytes // 64 for v in state.values())
     cache = CacheConfig(capacity_blocks=int(ws_blocks * 0.5))
     print(f"arch={args.arch} (reduced) params={state['params'].size:,} floats; "
-          f"cache={cache.capacity_blocks} blocks of {ws_blocks}")
+          f"cache={cache.capacity_blocks} blocks of {ws_blocks}; "
+          f"fault model: {fault.spec()}")
 
-    base = CrashTester(app, PersistPlan.none(), cache, seed=0).run_campaign(
+    base = CrashTester(app, PersistPlan.none(), cache, seed=0, fault=fault).run_campaign(
         args.tests, n_workers=args.workers, store_path=args.store
     )
     print(f"\nbaseline (no persistence): {base.class_fractions()}")
@@ -62,7 +76,7 @@ def main() -> None:
     print("mean inconsistency rates:", {k: round(v, 3) for k, v in mean_inc.items()})
 
     ec = CrashTester(app, PersistPlan.at_loop_end(("params",), app), cache,
-                     seed=0).run_campaign(args.tests, n_workers=args.workers)
+                     seed=0, fault=fault).run_campaign(args.tests, n_workers=args.workers)
     print(f"\npersist params at loop end: {ec.class_fractions()}")
     print(f"recomputability {base.recomputability:.0%} -> {ec.recomputability:.0%}")
     print("\ntakeaway: SGD/Adam training is a naturally-resilient iterative "

@@ -18,6 +18,7 @@ from .cache_sim import (
     Flush,
     RegionEvents,
     Sweep,
+    TornBlock,
     resolve_window_images,
     simulate_window,
 )
@@ -28,6 +29,17 @@ from .crash_tester import (
     CrashTester,
     PersistPlan,
     PlannedTest,
+)
+from .faults import (
+    FAULT_MODELS,
+    BitFlip,
+    CorrelatedRegion,
+    FaultModel,
+    MultiCrash,
+    PowerFail,
+    TornWrite,
+    fault_model_from_spec,
+    get_fault_model,
 )
 from .efficiency import (
     SystemConfig,
@@ -45,9 +57,12 @@ from .workflow import WorkflowResult, run_workflow
 __all__ = [
     "NVMArena", "WriteStats", "DEFAULT_BLOCK_BYTES", "block_diff_mask",
     "inconsistent_rate", "mix_blocks", "num_blocks", "CacheConfig", "Flush",
-    "RegionEvents", "Sweep", "resolve_window_images", "simulate_window",
-    "CampaignStore", "CampaignStoreError", "CampaignResult",
-    "CrashRecord", "CrashTester", "PersistPlan", "PlannedTest", "SystemConfig",
+    "RegionEvents", "Sweep", "TornBlock", "resolve_window_images",
+    "simulate_window", "CampaignStore", "CampaignStoreError", "CampaignResult",
+    "CrashRecord", "CrashTester", "PersistPlan", "PlannedTest",
+    "FAULT_MODELS", "BitFlip", "CorrelatedRegion", "FaultModel", "MultiCrash",
+    "PowerFail", "TornWrite", "fault_model_from_spec", "get_fault_model",
+    "SystemConfig",
     "efficiency_with", "efficiency_without", "scale_mtbf", "tau_threshold",
     "young_interval", "EasyCrashManager", "FlushPolicy", "flatten_state",
     "unflatten_state", "IterativeApp", "Region", "State", "VerifyResult",

@@ -28,11 +28,27 @@ from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .blocks import DEFAULT_BLOCK_BYTES
+
+
+class TornBlock(NamedTuple):
+    """A cacheline whose in-flight store landed partially at the crash.
+
+    Bytes ``[0, cut_bytes)`` of block ``block`` of ``obj`` carry the new
+    version written by region occurrence ``seq``; the suffix keeps whatever
+    the resolved NVM image held.  Produced by fault models
+    (:mod:`repro.core.faults`), consumed by :func:`resolve_window_images` /
+    :func:`apply_torn_blocks`.
+    """
+
+    obj: str
+    block: int
+    cut_bytes: int
+    seq: int
 
 
 @dataclass(frozen=True)
@@ -306,6 +322,34 @@ def _chronic_adjusted_base(
     return mix_blocks(chronic_base[obj], base, ~chronic_mask, block_bytes)
 
 
+def apply_torn_blocks(
+    image: Dict[str, np.ndarray],
+    torn: Sequence[TornBlock],
+    seq_values: Mapping[int, Mapping[str, np.ndarray]],
+    block_bytes: int,
+) -> Dict[str, np.ndarray]:
+    """Land partial cachelines on a resolved NVM image, in place.
+
+    For each :class:`TornBlock`, the first ``cut_bytes`` bytes of the block
+    take the torn store's version; the rest of the block keeps the image's
+    value.  Arrays in ``image`` must own their data (the resolvers' snapshots
+    do); they are mutated and the same dict is returned.
+    """
+    for tb in torn:
+        if tb.obj not in image:
+            continue
+        versions = seq_values.get(tb.seq, {})
+        if tb.obj not in versions:
+            continue
+        dst = image[tb.obj].view(np.uint8).reshape(-1)
+        src = np.ascontiguousarray(versions[tb.obj]).view(np.uint8).reshape(-1)
+        lo = tb.block * block_bytes
+        hi = min(lo + min(int(tb.cut_bytes), block_bytes), dst.size)
+        if hi > lo:
+            dst[lo:hi] = src[lo:hi]
+    return image
+
+
 def resolve_window_images(
     trace: WindowTrace,
     crash_ts: Sequence[int],
@@ -313,6 +357,7 @@ def resolve_window_images(
     seq_values: Mapping[int, Mapping[str, np.ndarray]],
     block_bytes: int,
     chronic_base: Optional[Mapping[str, np.ndarray]] = None,
+    tearing: Optional[Sequence[Optional[Sequence[TornBlock]]]] = None,
 ) -> Tuple[List[Dict[str, np.ndarray]], List[Dict[str, np.ndarray]]]:
     """Batch form of :func:`resolve_nvm_image` + :func:`resolve_live_values`.
 
@@ -324,6 +369,11 @@ def resolve_window_images(
     never overlap in time, so extending the in-flight sweep before applying
     later ones reproduces the per-time application order), but one campaign
     window costs one pass instead of one pass per test.
+
+    ``tearing`` (the fault-model hook): an optional per-crash list of
+    :class:`TornBlock` partial-store patches, aligned with ``crash_ts``;
+    each is applied to that crash's NVM snapshot only — the running image
+    and the other crashes' snapshots are unaffected.
 
     Returns ``(nvm_images, live_values)`` aligned with ``crash_ts``.
     """
@@ -362,6 +412,8 @@ def resolve_window_images(
                 wb_cursor[obj] = n
             dtype, shape = shapes[obj]
             nvm_snap[obj] = nvm_cur[obj].copy().view(dtype).reshape(shape)
+        if tearing is not None and tearing[idx]:
+            apply_torn_blocks(nvm_snap, tearing[idx], seq_values, block_bytes)
         nvm_out[idx] = nvm_snap
 
         for si, sw in enumerate(trace.sweeps):

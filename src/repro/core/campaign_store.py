@@ -112,6 +112,12 @@ class CampaignStore:
             self._append({"type": "header", **fingerprint})
             return {}
         found = {k: existing.get(k) for k in fingerprint}
+        # legacy headers predate pluggable fault models; those campaigns ran
+        # under the clean-power-fail semantics, so a missing "fault" key
+        # means exactly that — old stores stay resumable with the default
+        # model (and still refuse any other)
+        if "fault" in fingerprint and found.get("fault") is None:
+            found["fault"] = {"model": "power-fail"}
         # compare in JSON space: the header went through a JSON round-trip,
         # so the live fingerprint must too (tuples become lists, etc.)
         if found != json.loads(json.dumps(dict(fingerprint))):

@@ -14,6 +14,11 @@ the outcome:
 Recomputability = |S1| / |tests| (paper §2.2).  Each record also carries the
 per-object data-inconsistency rate, which feeds the Spearman selection
 (:mod:`repro.core.selection`).
+
+What a "crash" *is* is pluggable: a :class:`~repro.core.faults.FaultModel`
+controls the crash-point distribution, cacheline tearing, image corruption
+and crashes-during-recovery.  The default :class:`~repro.core.faults.PowerFail`
+reproduces the historical single-clean-power-fail engine bit-for-bit.
 """
 from __future__ import annotations
 
@@ -31,9 +36,11 @@ from .cache_sim import (
     RegionEvents,
     Sweep,
     WindowTrace,
+    resolve_nvm_image,
     resolve_window_images,
     simulate_window,
 )
+from .faults import FaultModel, PowerFail
 from .regions import IterativeApp, Region, State, VerifyResult, object_blocks
 
 
@@ -80,11 +87,18 @@ class CrashRecord:
 class PlannedTest:
     """One pre-drawn crash test: campaign randomness is fully resolved up
     front (same draw order as the historical serial engine), so execution
-    order — serial, sharded, parallel, resumed — cannot change the result."""
+    order — serial, sharded, parallel, resumed — cannot change the result.
+
+    ``fault_seed`` carries the test's fault-model entropy (torn-write /
+    bit-flip / recovery-crash decisions), pre-drawn by the planner for models
+    that need it; 0 for the default :class:`~repro.core.faults.PowerFail`,
+    whose planning draws are exactly the historical two per test.
+    """
 
     index: int        # position in the campaign (stable output ordering)
     crash_iter: int   # iteration whose window the crash falls in
     crash_t: int      # crash time inside the window, in block accesses
+    fault_seed: int = 0
 
 
 @dataclass
@@ -136,17 +150,20 @@ class CrashTester:
         cache: CacheConfig = CacheConfig(),
         seed: int = 0,
         max_extra_factor: float = 2.0,
+        fault: Optional[FaultModel] = None,
     ):
         self.app = app
         self.plan = plan
         self.cache = cache
         self.seed = seed
         self.max_extra_factor = max_extra_factor
+        self.fault = fault if fault is not None else PowerFail()
         self._golden_states: Optional[List[State]] = None
         self._golden_iters: int = 0
         self._golden_final: Optional[State] = None
         self._window_cache: Dict[int, Tuple[WindowTrace, Dict[int, Dict[str, np.ndarray]], int]] = {}
         self._iter_time: Optional[int] = None
+        self._region_spans: Optional[List[Tuple[int, int]]] = None
 
     # ---------------------------------------------------------------- golden
     def _ensure_golden(self) -> None:
@@ -204,24 +221,25 @@ class CrashTester:
                 events.append(Flush(o))
         return events
 
-    def _simulate_crash_window(
-        self, crash_iter: int
+    def _simulate_window_from(
+        self, state0: State, first: int, last: int
     ) -> Tuple[WindowTrace, Dict[int, Dict[str, np.ndarray]], int]:
-        """Simulate iterations [crash_iter-1, crash_iter] once; cache result."""
-        if crash_iter in self._window_cache:
-            return self._window_cache[crash_iter]
-        self._ensure_golden()
+        """Simulate iterations [first, last] starting from ``state0``.
+
+        ``state0`` is not mutated.  Returns the window trace, the per-region
+        written values, and the time the *last* iteration's span starts at
+        (crash times are drawn from the last iteration of a window).
+        """
         app = self.app
         regs = app.regions()
-        first = max(0, crash_iter - 1)
-        state = {k: np.array(v, copy=True) for k, v in self._golden_states[first].items()}
+        state = {k: np.array(v, copy=True) for k, v in state0.items()}
         tracked = self._tracked_objects(state)
         obj_blocks = object_blocks(state, tracked, self.cache.block_bytes)
 
         region_events: List[RegionEvents] = []
         seq_values: Dict[int, Dict[str, np.ndarray]] = {}
         seq = 0
-        for it in range(first, crash_iter + 1):
+        for it in range(first, last + 1):
             for ridx, region in enumerate(regs):
                 state = region.fn(state)
                 seq_values[seq] = {
@@ -237,40 +255,63 @@ class CrashTester:
                 )
                 seq += 1
         trace = simulate_window(self.cache, obj_blocks, region_events)
-        # crash times are drawn from the *last* iteration of the window
-        crash_span_start = next(t0 for (s, it, ridx, t0, t1) in trace.spans if it == crash_iter)
-        result = (trace, seq_values, crash_span_start)
+        crash_span_start = next(t0 for (s, it, ridx, t0, t1) in trace.spans if it == last)
+        return trace, seq_values, crash_span_start
+
+    def _simulate_crash_window(
+        self, crash_iter: int
+    ) -> Tuple[WindowTrace, Dict[int, Dict[str, np.ndarray]], int]:
+        """Simulate iterations [crash_iter-1, crash_iter] once; cache result."""
+        if crash_iter in self._window_cache:
+            return self._window_cache[crash_iter]
+        self._ensure_golden()
+        first = max(0, crash_iter - 1)
+        result = self._simulate_window_from(
+            self._golden_states[first], first, crash_iter
+        )
         self._window_cache[crash_iter] = result
         return result
 
     # -------------------------------------------------------------- planning
-    def _iter_access_time(self) -> int:
-        """Block accesses one iteration contributes to a window's clock.
+    def region_time_spans(self) -> List[Tuple[int, int]]:
+        """Per-region ``(t0, t1)`` offsets within one iteration's window clock.
 
         ``simulate_window`` advances time one unit per swept block (hot
-        refreshes and flushes are free), so window span boundaries are pure
+        refreshes and flushes are free), so region span boundaries are pure
         arithmetic over object sizes — campaign planning never needs to
-        simulate a window.
+        simulate a window.  Fault models use these spans to bias crash-point
+        draws toward specific regions.
         """
-        if self._iter_time is not None:
-            return self._iter_time
+        if self._region_spans is not None:
+            return self._region_spans
         self._ensure_golden()
         state0 = self._golden_states[0]
         tracked = self._tracked_objects(state0)
         blocks = object_blocks(state0, tracked, self.cache.block_bytes)
-        total = 0
+        spans: List[Tuple[int, int]] = []
+        t = 0
         for region in self.app.regions():
+            t0 = t
             hot = tuple(region.hot_reads)
             for o in region.reads:
                 if o not in hot and o in blocks:
-                    total += blocks[o]
+                    t += blocks[o]
             for o in region.writes:
                 if o in blocks:
-                    total += blocks[o]
-        self._iter_time = total
-        return total
+                    t += blocks[o]
+            spans.append((t0, t))
+        self._region_spans = spans
+        return spans
 
-    def _window_bounds(self, crash_iter: int) -> Tuple[int, int]:
+    def _iter_access_time(self) -> int:
+        """Block accesses one iteration contributes to a window's clock."""
+        if self._iter_time is not None:
+            return self._iter_time
+        spans = self.region_time_spans()
+        self._iter_time = spans[-1][1] if spans else 0
+        return self._iter_time
+
+    def window_bounds(self, crash_iter: int) -> Tuple[int, int]:
         """(t_lo, t_end) of the crash span: the window is iterations
         [crash_iter-1, crash_iter] and crash times are drawn from the last."""
         it_t = self._iter_access_time()
@@ -278,31 +319,39 @@ class CrashTester:
             return it_t, 2 * it_t
         return 0, it_t
 
-    def plan_campaign(self, n_tests: int, seed: Optional[int] = None) -> List[PlannedTest]:
-        """Pre-draw every crash point with the campaign RNG.
+    # historical (pre-fault-model) spelling, kept for callers and tests
+    _window_bounds = window_bounds
 
-        The draw order (crash iteration, then crash time within the
-        iteration's window) is exactly the historical serial engine's, so a
-        planned campaign at ``n_workers=1`` reproduces it bit-for-bit.
+    def _draw_test(self, rng: np.random.Generator, index: int) -> PlannedTest:
+        """One planned test via the fault model's crash-point hook; models
+        that need per-test entropy get a fault seed drawn *after* the crash
+        point, so the default model's draw stream stays the historical one."""
+        crash_iter, crash_t = self.fault.draw_crash_point(rng, self)
+        fault_seed = (
+            int(rng.integers(0, np.iinfo(np.int64).max))
+            if self.fault.uses_test_entropy
+            else 0
+        )
+        return PlannedTest(index, crash_iter, crash_t, fault_seed)
+
+    def plan_campaign(self, n_tests: int, seed: Optional[int] = None) -> List[PlannedTest]:
+        """Pre-draw every crash point (and per-test fault entropy) with the
+        campaign RNG.
+
+        For the default :class:`~repro.core.faults.PowerFail` model the draw
+        order (crash iteration, then crash time within the iteration's
+        window) is exactly the historical serial engine's, so a planned
+        campaign at ``n_workers=1`` reproduces it bit-for-bit.
         """
         self._ensure_golden()
         rng = np.random.default_rng(self.seed if seed is None else seed)
-        tests: List[PlannedTest] = []
-        for i in range(n_tests):
-            crash_iter = int(rng.integers(0, self._golden_iters))
-            t_lo, t_end = self._window_bounds(crash_iter)
-            tests.append(PlannedTest(i, crash_iter, int(rng.integers(t_lo, t_end))))
-        return tests
+        return [self._draw_test(rng, i) for i in range(n_tests)]
 
     # ----------------------------------------------------------------- tests
     def run_one(self, rng: np.random.Generator) -> CrashRecord:
         self._ensure_golden()
-        crash_iter = int(rng.integers(0, self._golden_iters))
-        t_lo, t_end = self._window_bounds(crash_iter)
-        crash_t = int(rng.integers(t_lo, t_end))
-        (_, record), = self.run_window_tests(
-            crash_iter, [PlannedTest(0, crash_iter, crash_t)]
-        )
+        test = self._draw_test(rng, 0)
+        (_, record), = self.run_window_tests(test.crash_iter, [test])
         return record
 
     def run_window_tests(
@@ -326,17 +375,25 @@ class CrashTester:
         }
         candidates = [o for o in app.candidates if o in start_values]
         chronic = self._chronic_base(candidates, crash_iter) if crash_iter >= 1 else None
+        tearing = [
+            self.fault.torn_blocks(t, trace, self.cache.block_bytes) for t in tests
+        ]
         nvms, lives = resolve_window_images(
             trace, [t.crash_t for t in tests],
             {o: start_values[o] for o in candidates},
             seq_values, self.cache.block_bytes,
             chronic_base=chronic,
+            tearing=tearing,
         )
 
+        protected = tuple(self.plan.objects)
+        if app.iterator_object:
+            protected += (app.iterator_object,)
         out: List[Tuple[int, CrashRecord]] = []
         for test, nvm, live in zip(tests, nvms, lives):
             seq, it, region_idx, t0, t1 = trace.span_for_time(test.crash_t)
             frac = (test.crash_t - t0) / max(1, (t1 - t0))
+            nvm = self.fault.corrupt_image(test, nvm, protected)
             inconsistency = {o: inconsistent_rate(nvm[o], live[o]) for o in candidates}
 
             # All candidates restart from the NVM image (paper §5.1: "the
@@ -349,7 +406,7 @@ class CrashTester:
             if app.iterator_object and app.iterator_object in persisted:
                 bookmark = np.asarray(persisted[app.iterator_object])
                 persisted[app.iterator_object] = np.full_like(bookmark, crash_iter)
-            outcome, extra, metric = self._restart_and_classify(persisted, crash_iter)
+            outcome, extra, metric = self._classify_test(persisted, crash_iter, test)
             out.append((
                 test.index,
                 CrashRecord(
@@ -391,31 +448,98 @@ class CrashTester:
                 out[o] = self._golden_states[0][o]
         return out
 
+    def _finish_classify(self, state: State, it: int) -> Tuple[str, int, float]:
+        """Classify a finished recompute run: S1 (passes), S2 (passes after
+        extra iterations, up to the budget), S4 (budget exhausted)."""
+        app = self.app
+        budget = int(self.max_extra_factor * self._golden_iters)
+        res = app.verify(state)
+        if res.passed:
+            return "S1", 0, res.metric
+        extra = 0
+        while it < budget:
+            state = app.run_iteration(state)
+            it += 1
+            extra += 1
+            res = app.verify(state)
+            if res.passed:
+                return "S2", extra, res.metric
+        return "S4", extra, res.metric
+
+    def _classify_test(
+        self, persisted: Mapping[str, np.ndarray], restart_iter: int, test: PlannedTest
+    ) -> Tuple[str, int, float]:
+        """Restart-and-classify, routed through the fault model's recovery
+        hook: models may crash the recompute run itself."""
+        recovery = self.fault.recovery_plan(test, restart_iter, self._golden_iters)
+        if recovery is None:
+            return self._restart_and_classify(persisted, restart_iter)
+        return self._restart_with_recovery_crash(persisted, restart_iter, test, recovery)
+
     def _restart_and_classify(
         self, persisted: Mapping[str, np.ndarray], restart_iter: int
     ) -> Tuple[str, int, float]:
         app = self.app
         golden_iters = self._golden_iters
-        budget = int(self.max_extra_factor * golden_iters)
         try:
             state = app.restart_init(self.seed, persisted)
             state, executed = app.run_to_completion(state, restart_iter, golden_iters)
-            res = app.verify(state)
-            if res.passed:
-                return "S1", 0, res.metric
-            extra = 0
-            it = restart_iter + executed
-            while it < budget:
+            return self._finish_classify(state, restart_iter + executed)
+        except Exception:  # incl. FloatingPointError blow-ups
+            return "S3", 0, float("nan")
+
+    def _restart_with_recovery_crash(
+        self,
+        persisted: Mapping[str, np.ndarray],
+        restart_iter: int,
+        test: PlannedTest,
+        recovery: Tuple[int, float],
+    ) -> Tuple[str, int, float]:
+        """Recovery-from-recovery: run the recompute up to the second crash's
+        window, simulate that window on the *live recompute trajectory*,
+        resolve the second NVM image and restart again.
+
+        The second window starts cache-consistent and carries no chronic
+        base (the recompute trajectory is not in the steady-state regime the
+        chronic adjustment models).  If the recompute converges before the
+        second crash iteration, the run simply finished first and is
+        classified as usual.
+        """
+        app = self.app
+        recrash_iter, u = recovery
+        try:
+            state = app.restart_init(self.seed, persisted)
+            it = restart_iter
+            w_first = max(restart_iter, recrash_iter - 1)
+            while it < w_first:
                 state = app.run_iteration(state)
                 it += 1
-                extra += 1
-                res = app.verify(state)
-                if res.passed:
-                    return "S2", extra, res.metric
-            return "S4", extra, res.metric
-        except FloatingPointError:
-            return "S3", 0, float("nan")
-        except Exception:
+                if app.converged(state, it):
+                    return self._finish_classify(state, it)
+
+            trace, seq_values, span_start = self._simulate_window_from(
+                state, w_first, recrash_iter
+            )
+            span = max(1, trace.t_end - span_start)
+            crash_t2 = span_start + min(int(u * span), span - 1)
+            candidates = [
+                o for o in app.candidates if o in state and o in trace.obj_blocks
+            ]
+            image = resolve_nvm_image(
+                trace, crash_t2,
+                {o: state[o] for o in candidates},
+                seq_values, self.cache.block_bytes,
+            )
+            persisted2 = dict(image)
+            if app.iterator_object and app.iterator_object in persisted2:
+                bookmark = np.asarray(persisted2[app.iterator_object])
+                persisted2[app.iterator_object] = np.full_like(bookmark, recrash_iter)
+            state2 = app.restart_init(self.seed, persisted2)
+            state2, executed = app.run_to_completion(
+                state2, recrash_iter, self._golden_iters
+            )
+            return self._finish_classify(state2, recrash_iter + executed)
+        except Exception:  # incl. FloatingPointError blow-ups
             return "S3", 0, float("nan")
 
     # -------------------------------------------------------------- campaign
@@ -453,6 +577,9 @@ class CrashTester:
             "cache_blocks": int(self.cache.capacity_blocks),
             "block_bytes": int(self.cache.block_bytes),
             "max_extra_factor": float(self.max_extra_factor),
+            # a store is bound to one failure model: resuming a PowerFail
+            # store with, say, TornWrite would silently mix taxonomies
+            "fault": self.fault.spec(),
         }
 
     def _shards(self, tests: Sequence[PlannedTest]) -> Dict[int, List[PlannedTest]]:
@@ -504,7 +631,7 @@ class CrashTester:
             import warnings
 
             try:
-                pickle.dumps((self.app, self.plan, self.cache))
+                pickle.dumps((self.app, self.plan, self.cache, self.fault))
             except Exception as e:  # noqa: BLE001 - any pickling failure
                 warnings.warn(
                     f"{self.app.name}: campaign payload is not picklable "
@@ -529,7 +656,7 @@ class CrashTester:
                 mp_context=ctx,
                 initializer=_shard_worker_init,
                 initargs=(self.app, self.plan, self.cache, self.seed,
-                          self.max_extra_factor),
+                          self.max_extra_factor, self.fault),
             ) as ex:
                 futs = {
                     ex.submit(_shard_worker_run, ci, ts): ci
@@ -582,10 +709,11 @@ def _shard_worker_init(
     cache: CacheConfig,
     seed: int,
     max_extra_factor: float,
+    fault: Optional[FaultModel] = None,
 ) -> None:
     global _WORKER_TESTER
     _WORKER_TESTER = CrashTester(
-        app, plan, cache, seed=seed, max_extra_factor=max_extra_factor
+        app, plan, cache, seed=seed, max_extra_factor=max_extra_factor, fault=fault
     )
 
 

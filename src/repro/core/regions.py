@@ -53,6 +53,12 @@ class IterativeApp:
     #: footnote 3: "we always persist a loop iterator to bookmark where the
     #: crash happens ... almost zero impact on performance")
     iterator_object: Optional[str] = "k"
+    #: per-app fault-model parameter overrides for crash campaigns:
+    #: ``{model_name: {param: value}}``, consumed by
+    #: :func:`repro.core.faults.get_fault_model` (and the benchmark fault
+    #: sweep).  Apps whose structure makes a failure mode unusually punishing
+    #: (or trivial) tune the model here instead of at every call site.
+    fault_defaults: Mapping[str, Mapping[str, object]] = {}
 
     def regions(self) -> Tuple[Region, ...]:
         raise NotImplementedError

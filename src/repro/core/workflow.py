@@ -21,6 +21,7 @@ import numpy as np
 from .cache_sim import CacheConfig
 from .crash_tester import CampaignResult, CrashTester, PersistPlan
 from .efficiency import SystemConfig, tau_threshold
+from .faults import FaultModel
 from .regions import IterativeApp
 from .selection import (
     ObjectScore,
@@ -122,12 +123,19 @@ def run_workflow(
     seed: int = 0,
     region_measure: str = "isolated",
     n_workers: int = 1,
+    fault_model: Optional[FaultModel] = None,
 ) -> WorkflowResult:
     """Steps 1–3.
 
     ``n_workers`` is handed to every campaign the workflow runs
     (:meth:`repro.core.crash_tester.CrashTester.run_campaign`); results are
     identical for every worker count.
+
+    ``fault_model`` selects what a "crash" is for every campaign the
+    workflow runs (:mod:`repro.core.faults`); ``None`` is the paper's clean
+    power failure.  Characterizing under one model and deploying the plan
+    under another is exactly the scenario-robustness question the fault
+    sweep in ``benchmarks/bench_recomputability.py`` measures.
 
     ``region_measure`` selects how c_k^max is estimated:
 
@@ -142,9 +150,9 @@ def run_workflow(
     tau = tau_threshold(system, t_s=t_s)
 
     # Step 1: baseline campaign (NVM holds whatever eviction left there).
-    baseline = CrashTester(app, PersistPlan.none(), cache, seed=seed).run_campaign(
-        n_tests, n_workers=n_workers
-    )
+    baseline = CrashTester(
+        app, PersistPlan.none(), cache, seed=seed, fault=fault_model
+    ).run_campaign(n_tests, n_workers=n_workers)
 
     # Step 2: Spearman object selection.  The loop iterator is excluded: it
     # is *always* persisted (paper fn. 3), never subject to selection.
@@ -165,7 +173,7 @@ def run_workflow(
     a = region_time_fractions(app, cache.block_bytes)
     l = estimate_region_overheads(app, crit, block_bytes=cache.block_bytes)
     best_plan = PersistPlan.best(crit, app)
-    best = CrashTester(app, best_plan, cache, seed=seed + 1).run_campaign(
+    best = CrashTester(app, best_plan, cache, seed=seed + 1, fault=fault_model).run_campaign(
         n_tests, n_workers=n_workers
     )
 
@@ -184,9 +192,9 @@ def run_workflow(
         per_region_n = max(30, n_tests // 2)
         for k in range(n_regions):
             plan_k = PersistPlan(objects=crit, region_freq={k: 1})
-            camp_k = CrashTester(app, plan_k, cache, seed=seed + 2 + k).run_campaign(
-                per_region_n, n_workers=n_workers
-            )
+            camp_k = CrashTester(
+                app, plan_k, cache, seed=seed + 2 + k, fault=fault_model
+            ).run_campaign(per_region_n, n_workers=n_workers)
             gains[k] = camp_k.recomputability - baseline.recomputability
             overheads[k] = l[k]
         sel = select_regions_from_gains(

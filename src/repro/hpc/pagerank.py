@@ -41,6 +41,14 @@ def _damped(y: jnp.ndarray, rank: jnp.ndarray, damping: float) -> Tuple[jnp.ndar
 class PageRankApp(IterativeApp):
     name = "pagerank"
     candidates = ("rank", "y", "k")
+    #: campaign fault tuning: the rank vector is chronically cached (hot in
+    #: the spmv), so NVM holds ancient rank data — silent bit flips there are
+    #: the interesting SDC surface, and correlated failures should strike the
+    #: dominant spmv region.
+    fault_defaults = {
+        "bit-flip": {"n_bits": 16},
+        "correlated-region": {"shape": 3.0},
+    }
 
     def __init__(self, n_nodes: int = 256, out_degree: int = 3, damping: float = 0.9,
                  tol: float = 1e-5, n_iters: int = 100, seed: int = 0):

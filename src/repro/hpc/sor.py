@@ -56,6 +56,14 @@ def _rb_sor(u_flat: jnp.ndarray, b_flat: jnp.ndarray, g: int, omega: float,
 class SORApp(IterativeApp):
     name = "sor"
     candidates = ("u", "res", "k")
+    #: campaign fault tuning: the red/black sweep is the heavy region and a
+    #: contraction, so correlated failures should concentrate there
+    #: (shape=4); torn half-sweep cachelines are the realistic tearing
+    #: surface for a stencil smoother, so tear deeper into the store queue.
+    fault_defaults = {
+        "correlated-region": {"shape": 4.0},
+        "torn-write": {"p_torn": 0.7, "depth": 16},
+    }
 
     def __init__(self, grid: int = 32, tol: float = 1e-4, n_iters: int = 200,
                  seed: int = 0, omega: float | None = None, pairs_per_iter: int = 2):

@@ -28,6 +28,13 @@ CI_SIZES: Dict[str, dict] = {
     "pagerank": dict(n_nodes=192, n_iters=100),
 }
 
+#: apps of the fault-model sweep (``bench_recomputability.py --fault-sweep``):
+#: a spectrum pick — structured-grid smoothers (mg, sor), a hot-object
+#: clustering code (kmeans) and an irregular graph workload (pagerank) — so
+#: per-model S1–S4 shifts are visible across workload shapes.  Per-app fault
+#: parameters live on each app class (``IterativeApp.fault_defaults``).
+FAULT_SWEEP_APPS = ("mg", "kmeans", "sor", "pagerank")
+
 #: benchmark-sized instances (paper-figure campaigns, minutes-scale)
 BENCH_SIZES: Dict[str, dict] = {
     "cg": dict(grid=48, n_iters=600),

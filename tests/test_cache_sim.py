@@ -9,8 +9,10 @@ from repro.core.cache_sim import (
     Flush,
     RegionEvents,
     Sweep,
+    _LRU,
     resolve_live_values,
     resolve_nvm_image,
+    resolve_window_images,
     simulate_window,
 )
 
@@ -140,3 +142,225 @@ def test_write_accounting_flush_clean_is_free():
     assert trace.flush_writes == 8          # first flush writes all dirty
     assert trace.flushed_clean_blocks == 8  # second flush: all clean, free
     assert trace.flush_ops == 2
+
+
+# --------------------------------------------------- batch resolver properties
+def _random_event_window(rng, with_hot=True):
+    """Arbitrary region/flush event window (the generator behind the
+    ``resolve_window_images`` equivalence properties)."""
+    block_bytes = 16
+    sizes = [int(rng.integers(1, 14)) for _ in range(int(rng.integers(1, 4)))]
+    objs = {f"o{i}": s for i, s in enumerate(sizes)}
+    names = list(objs)
+    hot_obj = min(names, key=lambda o: objs[o]) if with_hot and len(names) > 1 else None
+    regions = []
+    seq_values = {}
+    seq = 0
+    for it in range(2):
+        for ridx in range(int(rng.integers(1, 4))):
+            events = []
+            writes = []
+            for _ in range(int(rng.integers(1, 4))):
+                o = names[int(rng.integers(0, len(names)))]
+                kind = int(rng.integers(0, 3))
+                if kind == 2:
+                    events.append(Flush(o))
+                elif kind == 1:
+                    hot = (
+                        (hot_obj,)
+                        if hot_obj and o != hot_obj and rng.random() < 0.5
+                        else ()
+                    )
+                    events.append(Sweep(o, write=True, hot=hot, hot_every=4))
+                    writes.append(o)
+                else:
+                    events.append(Sweep(o, write=False))
+            regions.append(RegionEvents(seq=seq, iter_idx=it, region_idx=ridx,
+                                        events=tuple(events)))
+            seq_values[seq] = {
+                o: rng.standard_normal(objs[o] * block_bytes // 4).astype(np.float32)
+                for o in set(writes)
+            }
+            seq += 1
+    start = {
+        o: rng.standard_normal(objs[o] * block_bytes // 4).astype(np.float32)
+        for o in names
+    }
+    capacity = int(rng.integers(1, sum(sizes) + 4))
+    return CacheConfig(capacity, block_bytes), objs, regions, start, seq_values
+
+
+def _replay_reference(cfg, obj_blocks, regions, start_values, seq_values, crash_ts):
+    """Fully independent step-by-step replay of the cache semantics.
+
+    Walks the event stream one block access at a time with its own LRU dict,
+    collecting timestamped write-back records and live-value snapshots, then
+    builds each crash time's NVM image by applying records with t <= crash_t
+    in order.  Shares no code with simulate_window/resolve_window_images.
+    """
+    from collections import OrderedDict
+
+    bb = cfg.block_bytes
+    as_bytes = lambda a: np.ascontiguousarray(a).view(np.uint8).reshape(-1)  # noqa: E731
+    live = {o: as_bytes(v).copy() for o, v in start_values.items()}
+    want = sorted(set(int(c) for c in crash_ts))
+    live_snaps = {}
+    records = []  # (t, obj, blk, seq) in emission order
+    lines = OrderedDict()
+    t = 0
+
+    def access(o, blk, writer_seq, at_t):
+        prev = lines.pop((o, blk), None)
+        if prev is None and len(lines) >= cfg.capacity_blocks:
+            (eo, eb), eseq = lines.popitem(last=False)
+            if eseq >= 0:
+                records.append((at_t, eo, eb, eseq))
+        if writer_seq >= 0:
+            lines[(o, blk)] = writer_seq
+        else:
+            lines[(o, blk)] = prev if (prev is not None and prev >= 0) else -1
+
+    def snap_live_if_due():
+        if t in want and t not in live_snaps:
+            live_snaps[t] = {o: v.copy() for o, v in live.items()}
+
+    for reg in regions:
+        for ev in reg.events:
+            if isinstance(ev, Sweep):
+                for b in range(obj_blocks[ev.obj]):
+                    snap_live_if_due()
+                    access(ev.obj, b, reg.seq if ev.write else -1, t)
+                    if ev.write and ev.obj in live:
+                        src = as_bytes(seq_values[reg.seq][ev.obj])
+                        lo, hi = b * bb, min((b + 1) * bb, live[ev.obj].size)
+                        live[ev.obj][lo:hi] = src[lo:hi]
+                    t += 1
+                    if ev.hot and b % ev.hot_every == ev.hot_every - 1:
+                        for h in ev.hot:
+                            for hb in range(obj_blocks[h]):
+                                access(h, hb, -1, t)
+            else:  # Flush
+                for (o, blk), seq in list(lines.items()):
+                    if o == ev.obj and seq >= 0:
+                        records.append((t, o, blk, seq))
+                        lines[(o, blk)] = -1
+    snap_live_if_due()
+    for ct in want:
+        live_snaps.setdefault(ct, {o: v.copy() for o, v in live.items()})
+
+    nvm_snaps = {}
+    for ct in want:
+        nvm = {o: as_bytes(v).copy() for o, v in start_values.items()}
+        for rt, o, blk, seq in records:
+            if rt > ct or o not in nvm:
+                continue
+            src = as_bytes(seq_values[seq][o])
+            lo, hi = blk * bb, min((blk + 1) * bb, nvm[o].size)
+            nvm[o][lo:hi] = src[lo:hi]
+        nvm_snaps[ct] = nvm
+    return nvm_snaps, live_snaps
+
+
+@given(seed=st.integers(0, 10_000), n_crashes=st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_batch_resolution_matches_step_by_step_replay(seed, n_crashes):
+    """resolve_window_images == an independent one-access-at-a-time replay,
+    for arbitrary region/flush/hot event sequences and crash times."""
+    rng = np.random.default_rng(seed)
+    cfg, objs, regions, start, seq_values = _random_event_window(rng)
+    trace = simulate_window(cfg, objs, regions)
+    if trace.t_end == 0:
+        return
+    crash_ts = rng.integers(0, trace.t_end + 1, size=n_crashes).tolist()
+    nvms, lives = resolve_window_images(
+        trace, crash_ts, start, seq_values, cfg.block_bytes
+    )
+    ref_nvm, ref_live = _replay_reference(cfg, objs, regions, start, seq_values, crash_ts)
+    for ct, nvm, live in zip(crash_ts, nvms, lives):
+        for o in start:
+            np.testing.assert_array_equal(
+                nvm[o].view(np.uint8).reshape(-1), ref_nvm[ct][o],
+                err_msg=f"nvm {o} t={ct} seed={seed}")
+            np.testing.assert_array_equal(
+                live[o].view(np.uint8).reshape(-1), ref_live[ct][o],
+                err_msg=f"live {o} t={ct} seed={seed}")
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_batch_resolution_matches_single_shot_property(seed):
+    """Property form of the batch==single-shot equivalence, including hot
+    sweeps and a chronic base image."""
+    rng = np.random.default_rng(seed)
+    cfg, objs, regions, start, seq_values = _random_event_window(rng)
+    trace = simulate_window(cfg, objs, regions)
+    if trace.t_end == 0:
+        return
+    crash_ts = rng.integers(0, trace.t_end + 1, size=5).tolist()
+    chronic = None
+    if seed % 2:
+        chronic = {o: np.full_like(v, 7.5) for o, v in start.items()}
+    nvms, lives = resolve_window_images(
+        trace, crash_ts, start, seq_values, cfg.block_bytes, chronic_base=chronic
+    )
+    for ct, nvm, live in zip(crash_ts, nvms, lives):
+        ref_nvm = resolve_nvm_image(trace, ct, start, seq_values, cfg.block_bytes,
+                                    chronic_base=chronic)
+        ref_live = resolve_live_values(trace, ct, start, seq_values, cfg.block_bytes)
+        for o in start:
+            np.testing.assert_array_equal(nvm[o], ref_nvm[o])
+            np.testing.assert_array_equal(live[o], ref_live[o])
+
+
+# ------------------------------------------------------------- LRU invariants
+@given(
+    capacity=st.integers(1, 8),
+    ops=st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 2), st.integers(0, 15)),
+        min_size=1, max_size=300,
+    ),
+)
+@settings(max_examples=60, deadline=None)
+def test_lru_capacity_and_dirty_invariants(capacity, ops):
+    """Model-based check of the exact LRU: capacity is never exceeded, dirty
+    lines are always resident, evictions hit the least-recently-used line,
+    and flushes clean without evicting."""
+    lru = _LRU(capacity)
+    order = []          # our own recency list, oldest first
+    dirty = {}          # key -> writer seq
+    for i, (kind, objid, blk) in enumerate(ops):
+        key = (f"o{objid}", blk)
+        if kind == 3:  # flush one object
+            obj = f"o{objid}"
+            lru.clean_obj(obj)
+            for k in list(dirty):
+                if k[0] == obj:
+                    del dirty[k]
+            assert lru.dirty_lines_of(obj) == []
+        else:
+            write = kind in (1, 2)
+            miss = key not in order
+            evicted = lru.access(key, i if write else -1)
+            if evicted is not None:
+                evk = (evicted[0], evicted[1])
+                assert evk == order[0], "eviction must be the LRU line"
+                assert evicted[2] == dirty[evk], "evicted seq is the writer's"
+                assert len(order) == capacity
+                order.pop(0)
+                dirty.pop(evk, None)
+            elif miss and len(order) >= capacity:
+                # the LRU line was clean: dropped silently, no write-back
+                assert order[0] not in dirty
+                order.pop(0)
+            if key in order:
+                order.remove(key)
+            order.append(key)
+            if write:
+                dirty[key] = i
+        # invariants after every op
+        assert len(lru._lines) <= capacity
+        resident = set(lru._lines)
+        all_dirty = {k for k, seq in lru._lines.items() if seq >= 0}
+        assert all_dirty <= resident
+        assert all_dirty == set(dirty), f"op {i}"
+        assert list(lru._lines) == order

@@ -1,0 +1,367 @@
+"""Fault-model subsystem: determinism, worker parity, resume, model semantics.
+
+Every :class:`~repro.core.faults.FaultModel` must be bit-for-bit identical
+across worker counts and across a kill/resume through the campaign store —
+the engine's determinism contract does not bend for exotic failure flavors.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import CrashTester, PersistPlan
+from repro.core.campaign_store import CampaignStoreError
+from repro.core.cache_sim import (
+    CacheConfig,
+    RegionEvents,
+    Sweep,
+    TornBlock,
+    apply_torn_blocks,
+    resolve_nvm_image,
+    resolve_window_images,
+    simulate_window,
+)
+from repro.core.crash_tester import PlannedTest
+from repro.core.faults import (
+    FAULT_MODELS,
+    BitFlip,
+    CorrelatedRegion,
+    MultiCrash,
+    PowerFail,
+    TornWrite,
+    fault_model_from_spec,
+    get_fault_model,
+)
+from repro.hpc.suite import ci_app, default_cache
+
+ALL_MODELS = [
+    PowerFail(),
+    TornWrite(),
+    MultiCrash(),
+    BitFlip(),
+    CorrelatedRegion(),
+]
+_IDS = [m.model_name for m in ALL_MODELS]
+
+
+@pytest.fixture(scope="module")
+def km_setup():
+    app = ci_app("kmeans")
+    return app, default_cache(app)
+
+
+def _dicts(campaign):
+    return [dataclasses.asdict(r) for r in campaign.records]
+
+
+# -------------------------------------------------------------------- registry
+def test_registry_and_spec_round_trip():
+    assert set(FAULT_MODELS) == {
+        "power-fail", "torn-write", "multi-crash", "bit-flip",
+        "correlated-region",
+    }
+    for model in ALL_MODELS:
+        spec = model.spec()
+        assert spec["model"] == model.model_name
+        import json
+
+        assert json.loads(json.dumps(spec)) == spec  # store fingerprint safe
+        assert fault_model_from_spec(spec) == model
+    with pytest.raises(KeyError, match="unknown fault model"):
+        get_fault_model("meteor-strike")
+
+
+def test_app_fault_defaults_layering(km_setup):
+    sor = ci_app("sor")
+    m = get_fault_model("torn-write", app=sor)
+    assert (m.p_torn, m.depth) == (0.7, 16)          # sor's fault_defaults
+    m = get_fault_model("torn-write", app=sor, depth=3)
+    assert (m.p_torn, m.depth) == (0.7, 3)           # explicit override wins
+    app, _ = km_setup
+    assert get_fault_model("torn-write", app=app) == TornWrite()
+
+
+# ----------------------------------------------------- PowerFail compatibility
+def test_powerfail_planning_is_the_historical_stream(km_setup):
+    """The default model must consume the campaign RNG exactly like the
+    pre-fault-model engine: two draws per test, no fault entropy."""
+    app, cache = km_setup
+    tester = CrashTester(app, PersistPlan.none(), cache, seed=11)
+    tests = tester.plan_campaign(16, 11)
+    rng = np.random.default_rng(11)
+    for pt in tests:
+        crash_iter = int(rng.integers(0, tester.golden_iters))
+        t_lo, t_end = tester.window_bounds(crash_iter)
+        crash_t = int(rng.integers(t_lo, t_end))
+        assert (pt.crash_iter, pt.crash_t, pt.fault_seed) == (crash_iter, crash_t, 0)
+
+
+def test_default_fault_is_powerfail(km_setup):
+    app, cache = km_setup
+    assert CrashTester(app, PersistPlan.none(), cache).fault == PowerFail()
+
+
+# ---------------------------------------------------------------- determinism
+@pytest.mark.parametrize("model", ALL_MODELS, ids=_IDS)
+def test_campaign_deterministic(km_setup, model):
+    app, cache = km_setup
+    a = CrashTester(app, PersistPlan.none(), cache, seed=5, fault=model).run_campaign(8)
+    b = CrashTester(app, PersistPlan.none(), cache, seed=5, fault=model).run_campaign(8)
+    assert _dicts(a) == _dicts(b)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("model", ALL_MODELS, ids=_IDS)
+def test_worker_parity(km_setup, model):
+    """Bit-for-bit identical outcomes for n_workers in {1, 2, 4}."""
+    app, cache = km_setup
+    serial = CrashTester(app, PersistPlan.none(), cache, seed=5, fault=model).run_campaign(10)
+    for workers in (2, 4):
+        par = CrashTester(app, PersistPlan.none(), cache, seed=5, fault=model).run_campaign(
+            10, n_workers=workers
+        )
+        assert _dicts(par) == _dicts(serial), (model.model_name, workers)
+
+
+@pytest.mark.parametrize("model", ALL_MODELS, ids=_IDS)
+def test_resume_after_kill(km_setup, tmp_path, model):
+    """A killed campaign (torn trailing shard line) resumes to the full
+    result, executing only the missing shards."""
+    app, cache = km_setup
+    path = str(tmp_path / f"{model.model_name}.jsonl")
+    full = CrashTester(app, PersistPlan.none(), cache, seed=5, fault=model).run_campaign(
+        10, store_path=path
+    )
+    lines = open(path).read().splitlines()
+    assert len(lines) >= 3  # header + >= 2 shards
+    with open(path, "w") as f:
+        f.write("\n".join(lines[:2]) + "\n" + lines[2][: len(lines[2]) // 2])
+    resumed = CrashTester(app, PersistPlan.none(), cache, seed=5, fault=model).run_campaign(
+        10, store_path=path
+    )
+    assert _dicts(resumed) == _dicts(full)
+
+
+def test_store_refuses_different_fault_model(km_setup, tmp_path):
+    app, cache = km_setup
+    path = str(tmp_path / "campaign.jsonl")
+    CrashTester(app, PersistPlan.none(), cache, seed=5).run_campaign(
+        6, store_path=path
+    )
+    with pytest.raises(CampaignStoreError):
+        CrashTester(
+            app, PersistPlan.none(), cache, seed=5, fault=TornWrite()
+        ).run_campaign(6, store_path=path)
+    # different parameters of the same model are different campaigns too
+    path2 = str(tmp_path / "torn.jsonl")
+    CrashTester(
+        app, PersistPlan.none(), cache, seed=5, fault=TornWrite()
+    ).run_campaign(6, store_path=path2)
+    with pytest.raises(CampaignStoreError):
+        CrashTester(
+            app, PersistPlan.none(), cache, seed=5, fault=TornWrite(p_torn=0.9)
+        ).run_campaign(6, store_path=path2)
+
+
+def test_legacy_store_without_fault_key_resumes_as_powerfail(km_setup, tmp_path):
+    """Stores written before fault models existed ran under power-fail
+    semantics: they must stay resumable with the default model and still
+    refuse any other."""
+    import json
+
+    app, cache = km_setup
+    path = str(tmp_path / "legacy.jsonl")
+    full = CrashTester(app, PersistPlan.none(), cache, seed=5).run_campaign(
+        6, store_path=path
+    )
+    lines = open(path).read().splitlines()
+    header = json.loads(lines[0])
+    del header["fault"]  # a PR-1 header has no fault key
+    with open(path, "w") as f:
+        f.write("\n".join([json.dumps(header)] + lines[1:]) + "\n")
+    resumed = CrashTester(app, PersistPlan.none(), cache, seed=5).run_campaign(
+        6, store_path=path
+    )
+    assert _dicts(resumed) == _dicts(full)
+    with pytest.raises(CampaignStoreError):
+        CrashTester(
+            app, PersistPlan.none(), cache, seed=5, fault=TornWrite()
+        ).run_campaign(6, store_path=path)
+
+
+# ------------------------------------------------------------------ torn-write
+def _one_sweep_window(n_blocks=10, block_bytes=16, capacity=32):
+    objs = {"a": n_blocks}
+    regions = [RegionEvents(seq=0, iter_idx=0, region_idx=0,
+                            events=(Sweep("a", write=True),))]
+    trace = simulate_window(CacheConfig(capacity, block_bytes), objs, regions)
+    start = {"a": np.zeros(n_blocks * block_bytes // 4, np.float32)}
+    seq_values = {0: {"a": np.ones(n_blocks * block_bytes // 4, np.float32)}}
+    return trace, start, seq_values, block_bytes
+
+
+def test_tearing_hook_lands_partial_cachelines():
+    """A torn block's prefix takes the in-flight version, its suffix keeps
+    the resolved NVM value; other crashes in the batch are unaffected."""
+    trace, start, seq_values, bb = _one_sweep_window()
+    crash_t = 5  # mid-sweep: blocks 0-4 written, all still dirty in cache
+    tearing = [[TornBlock("a", 4, 8, 0)], None]
+    nvms, _ = resolve_window_images(
+        trace, [crash_t, crash_t], start, seq_values, bb, tearing=tearing
+    )
+    torn = nvms[0]["a"].view(np.uint8)
+    lo = 4 * bb
+    ref = resolve_nvm_image(trace, crash_t, start, seq_values, bb)
+    np.testing.assert_array_equal(nvms[1]["a"], ref["a"])  # untorn == single-shot
+    expect = ref["a"].view(np.uint8).copy()
+    expect[lo:lo + 8] = seq_values[0]["a"].view(np.uint8)[lo:lo + 8]
+    np.testing.assert_array_equal(torn, expect)
+
+
+def test_apply_torn_blocks_ignores_unknown_and_clamps():
+    trace, start, seq_values, bb = _one_sweep_window(n_blocks=3)
+    img = resolve_nvm_image(trace, 1, start, seq_values, bb)
+    before = {o: v.copy() for o, v in img.items()}
+    apply_torn_blocks(img, [TornBlock("ghost", 0, 8, 0),     # unknown object
+                            TornBlock("a", 0, 8, 99),        # unknown writer
+                            TornBlock("a", 2, 10_000, 0)],   # cut clamped
+                      seq_values, bb)
+    np.testing.assert_array_equal(
+        img["a"].view(np.uint8)[:2 * bb], before["a"].view(np.uint8)[:2 * bb]
+    )
+    np.testing.assert_array_equal(
+        img["a"].view(np.uint8)[2 * bb:],
+        seq_values[0]["a"].view(np.uint8)[2 * bb:],
+    )
+
+
+def test_torn_write_model_tears_only_the_inflight_sweep():
+    trace, _, _, bb = _one_sweep_window(n_blocks=10)
+    model = TornWrite(p_torn=1.0, depth=4)
+    test = PlannedTest(0, 0, 6, fault_seed=123)
+    torn = model.torn_blocks(test, trace, bb)
+    assert torn  # p=1: every candidate tears
+    assert {tb.block for tb in torn} == {2, 3, 4, 5}  # last `depth` stores
+    assert all(tb.obj == "a" and 1 <= tb.cut_bytes < bb for tb in torn)
+    # crash after the sweep drained: nothing in flight, nothing tears
+    assert model.torn_blocks(PlannedTest(0, 0, 10, fault_seed=123), trace, bb) is None
+    # decisions depend only on the pre-drawn fault seed
+    assert model.torn_blocks(test, trace, bb) == torn
+
+
+# -------------------------------------------------------------------- bit-flip
+def test_bitflip_flips_exactly_k_bits_outside_protected():
+    image = {
+        "u": np.zeros(64, np.float32),
+        "flushed": np.zeros(64, np.float32),
+        "k": np.zeros(1, np.int64),
+    }
+    model = BitFlip(n_bits=12)
+    out = model.corrupt_image(PlannedTest(0, 0, 0, fault_seed=7), image,
+                              protected=("flushed", "k"))
+    assert np.count_nonzero(out["flushed"]) == 0
+    assert np.count_nonzero(out["k"]) == 0
+    flipped = int(np.unpackbits(out["u"].view(np.uint8)).sum())
+    assert flipped == 12  # distinct positions: every flip lands
+    # the input image is not mutated in place
+    assert np.count_nonzero(image["u"]) == 0
+    # protected-everything leaves the image untouched
+    same = model.corrupt_image(PlannedTest(0, 0, 0, fault_seed=7), image,
+                               protected=tuple(image))
+    assert all(np.count_nonzero(v) == 0 for v in same.values())
+
+
+# ----------------------------------------------------------- correlated-region
+class _FakePlanner:
+    """Minimal planner surface for exercising draw_crash_point in isolation."""
+
+    golden_iters = 7
+
+    def __init__(self, spans):
+        self._spans = spans
+
+    def window_bounds(self, crash_iter):
+        t_end = self._spans[-1][1]
+        return (t_end, 2 * t_end) if crash_iter >= 1 else (0, t_end)
+
+    def region_time_spans(self):
+        return self._spans
+
+
+def test_correlated_region_concentrates_on_heaviest():
+    """With spans (10, 30, 10), the heaviest region holds 60% of the window
+    clock; shape=8 weighting concentrates essentially every draw there."""
+    planner = _FakePlanner([(0, 10), (10, 40), (40, 50)])
+    rng = np.random.default_rng(0)
+    model = CorrelatedRegion(shape=8.0)
+    hits = 0
+    for _ in range(400):
+        crash_iter, crash_t = model.draw_crash_point(rng, planner)
+        t_lo, t_end = planner.window_bounds(crash_iter)
+        assert t_lo <= crash_t < t_end
+        off = crash_t - t_lo
+        hits += 10 <= off < 40
+    assert hits / 400 > 0.99  # (30/10)**8 : 1 odds per light region
+    # shape=1 recovers residency-proportional sampling
+    rng = np.random.default_rng(0)
+    flat_hits = sum(
+        10 <= (lambda p: p[1] - planner.window_bounds(p[0])[0])(
+            CorrelatedRegion(shape=1.0).draw_crash_point(rng, planner)
+        ) < 40
+        for _ in range(400)
+    )
+    assert abs(flat_hits / 400 - 0.6) < 0.08
+
+
+def test_correlated_region_on_a_real_app(km_setup):
+    """End-to-end: planned crash points are valid and lean toward the
+    heaviest region at least as hard as the uniform draw does."""
+    app, cache = km_setup
+    heavy = CrashTester(app, PersistPlan.none(), cache, seed=9,
+                        fault=CorrelatedRegion(shape=8.0))
+    spans = heavy.region_time_spans()
+    heaviest = max(range(len(spans)), key=lambda k: spans[k][1] - spans[k][0])
+
+    def hit_rate(tester):
+        tests = tester.plan_campaign(300, 9)
+        hits = 0
+        for t in tests:
+            t_lo, t_end = tester.window_bounds(t.crash_iter)
+            assert t_lo <= t.crash_t < t_end
+            off = t.crash_t - t_lo
+            hits += spans[heaviest][0] <= off < spans[heaviest][1]
+        return hits / len(tests)
+
+    uniform = CrashTester(app, PersistPlan.none(), cache, seed=9)
+    assert hit_rate(heavy) > hit_rate(uniform)
+
+
+# ----------------------------------------------------------------- multi-crash
+def test_multicrash_recovery_plan_bounds():
+    model = MultiCrash()
+    for fs in range(50):
+        t = PlannedTest(0, 3, 0, fault_seed=fs)
+        plan = model.recovery_plan(t, 3, 10)
+        assert plan is not None  # p_recrash=1.0
+        recrash_iter, u = plan
+        assert 3 <= recrash_iter < 10
+        assert 0.0 <= u < 1.0
+        assert model.recovery_plan(t, 3, 10) == plan  # pure in fault_seed
+    assert MultiCrash(p_recrash=0.0).recovery_plan(
+        PlannedTest(0, 3, 0, fault_seed=1), 3, 10
+    ) is None
+
+
+def test_multicrash_shifts_outcomes(km_setup):
+    """Recovery-from-recovery makes life harder.  ``p_recrash=0`` plans the
+    identical campaign (same RNG draws) but never fires the second crash, so
+    the comparison isolates the recovery fault itself."""
+    app, cache = km_setup
+    calm = CrashTester(app, PersistPlan.none(), cache, seed=5,
+                       fault=MultiCrash(p_recrash=0.0)).run_campaign(12)
+    multi = CrashTester(app, PersistPlan.none(), cache, seed=5,
+                        fault=MultiCrash()).run_campaign(12)
+    assert [(r.iter_idx, r.region_idx, r.frac) for r in multi.records] == \
+           [(r.iter_idx, r.region_idx, r.frac) for r in calm.records]
+    assert multi.class_fractions()["S1"] <= calm.class_fractions()["S1"] + 1e-9
+    assert _dicts(multi) != _dicts(calm)  # the second crash leaves a mark

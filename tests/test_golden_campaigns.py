@@ -1,0 +1,116 @@
+"""Golden regression: pinned S1-S4 counts for tiny fixed-seed campaigns.
+
+Any engine change that silently shifts outcome classification — cache-model
+semantics, window resolution, planning RNG, restart bookkeeping — fails
+here loudly, per suite app.  The counts live in
+``tests/golden/campaign_goldens.json``; when a shift is *intended* (and
+bit-for-bit compatibility has been consciously given up), regenerate with
+
+    PYTHONPATH=src python tests/test_golden_campaigns.py --regen
+
+and say so in the commit message.
+"""
+import json
+import os
+
+import pytest
+
+from repro.core import CrashTester, PersistPlan
+from repro.core.faults import get_fault_model
+from repro.hpc.suite import CI_SIZES, FAULT_SWEEP_APPS, ci_app, default_cache
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "campaign_goldens.json")
+
+#: campaign geometry of the pinned runs — changing any of this invalidates
+#: the golden file (the test compares the stored config too)
+GOLDEN_CONFIG = {"n_tests": 8, "seed": 123, "plan": "none"}
+
+
+def _golden_campaign(name, fault_name=None):
+    app = ci_app(name)
+    cache = default_cache(app)
+    fault = get_fault_model(fault_name, app=app) if fault_name else None
+    camp = CrashTester(
+        app, PersistPlan.none(), cache, seed=GOLDEN_CONFIG["seed"], fault=fault
+    ).run_campaign(GOLDEN_CONFIG["n_tests"])
+    counts = {c: 0 for c in ("S1", "S2", "S3", "S4")}
+    for r in camp.records:
+        counts[r.outcome] += 1
+    return {
+        "counts": counts,
+        "golden_iters": camp.golden_iters,
+        "crash_iters": [r.iter_idx for r in camp.records],
+    }
+
+
+def _load_goldens():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(CI_SIZES))
+def test_campaign_outcomes_match_golden(name):
+    goldens = _load_goldens()
+    assert goldens["config"] == GOLDEN_CONFIG, (
+        "golden config drifted; regenerate tests/golden/campaign_goldens.json"
+    )
+    assert name in goldens["apps"], f"no golden pinned for {name}; --regen"
+    got = _golden_campaign(name)
+    want = goldens["apps"][name]
+    assert got["golden_iters"] == want["golden_iters"], (
+        f"{name}: golden run length changed"
+    )
+    assert got["crash_iters"] == want["crash_iters"], (
+        f"{name}: planned crash points changed (campaign RNG stream drifted)"
+    )
+    assert got["counts"] == want["counts"], (
+        f"{name}: outcome classification shifted: {got['counts']} != {want['counts']}"
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(FAULT_SWEEP_APPS))
+def test_torn_write_outcomes_match_golden(name):
+    """Semantic drift in the fault subsystem (tearing bytes, per-test RNG
+    derivation, planning draws) shifts these counts even when the engine
+    stays internally consistent."""
+    goldens = _load_goldens()
+    got = _golden_campaign(name, fault_name="torn-write")
+    want = goldens["torn_write_apps"][name]
+    assert got["crash_iters"] == want["crash_iters"], (
+        f"{name}: torn-write planning stream drifted"
+    )
+    assert got["counts"] == want["counts"], (
+        f"{name}: torn-write classification shifted: "
+        f"{got['counts']} != {want['counts']}"
+    )
+
+
+def _regen():
+    apps = {name: _golden_campaign(name) for name in sorted(CI_SIZES)}
+    torn = {
+        name: _golden_campaign(name, fault_name="torn-write")
+        for name in sorted(FAULT_SWEEP_APPS)
+    }
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(
+            {"config": GOLDEN_CONFIG, "apps": apps, "torn_write_apps": torn},
+            f, indent=2, sort_keys=True,
+        )
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH}")
+    for name, g in apps.items():
+        print(f"  {name:12s} {g['counts']}")
+    for name, g in torn.items():
+        print(f"  torn:{name:7s} {g['counts']}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

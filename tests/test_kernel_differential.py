@@ -1,0 +1,120 @@
+"""Differential tests: Pallas kernels vs their pure references, CPU interpret.
+
+Unlike ``test_kernels.py`` (hypothesis-driven sweeps), these are plain
+parametrized tests so they run wherever a Pallas-capable jax exists — the
+dtype x odd-shape grid is the point: non-multiple-of-block sizes exercise
+the padding/tiling edges of ``delta_snapshot`` and the tail-chunk handling
+of ``rwkv6_scan``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "jax.experimental.pallas", reason="kernel tests need a Pallas-capable jax build"
+)
+
+from repro.core.blocks import block_diff_mask
+from repro.kernels.delta_snapshot.ops import dirty_block_mask
+from repro.kernels.delta_snapshot.ref import dirty_block_mask_reference
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_reference
+
+pytestmark = pytest.mark.kernel
+
+
+# ------------------------------------------------------------- delta snapshot
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("n", [1, 7, 255, 256, 257, 1000, 4097])
+def test_dirty_block_mask_differential(n, dtype):
+    """Kernel == jnp oracle for every dtype at odd (non-multiple-of-block)
+    lengths; the zero-padding of the tail block must never read as dirty."""
+    be = 256
+    rng = np.random.default_rng(n)
+    if dtype == jnp.int32:
+        x = rng.integers(-1000, 1000, size=n).astype(np.int32)
+    else:
+        x = rng.standard_normal(n).astype(np.float32)
+    p = x.copy()
+    idx = rng.choice(n, size=min(5, n), replace=False)
+    p[idx] += 1
+    xj = jnp.asarray(x, dtype)
+    pj = jnp.asarray(p, dtype)
+    got = np.asarray(dirty_block_mask(xj, pj, block_elems=be))
+    nb = -(-n // be)
+    assert got.shape == (nb,) and got.dtype == np.int32
+    xpad = jnp.zeros(nb * be, dtype).at[:n].set(xj)
+    ppad = jnp.zeros(nb * be, dtype).at[:n].set(pj)
+    ref = np.asarray(
+        dirty_block_mask_reference(xpad.reshape(nb, be), ppad.reshape(nb, be))
+    )
+    np.testing.assert_array_equal(got, ref)
+    changed = np.flatnonzero(np.asarray(xj) != np.asarray(pj))
+    assert set(np.flatnonzero(got)) == set(changed // be)
+    # identical inputs: padding contributes no phantom dirt
+    clean = np.asarray(dirty_block_mask(xj, xj, block_elems=be))
+    assert not clean.any()
+
+
+@pytest.mark.parametrize("n,block_bytes", [(300, 64), (1024, 64), (65, 32)])
+def test_dirty_block_mask_agrees_with_cpu_block_diff(n, block_bytes):
+    """The TPU flush-block mask and the campaign engine's byte-level
+    block_diff_mask must flag the same blocks when block sizes align
+    (block_elems * itemsize == block_bytes)."""
+    elems = block_bytes // 4
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal(n).astype(np.float32)
+    p = x.copy()
+    p[rng.choice(n, size=4, replace=False)] *= -1.0
+    kernel_mask = np.asarray(
+        dirty_block_mask(jnp.asarray(x), jnp.asarray(p), block_elems=elems)
+    ).astype(bool)
+    cpu_mask = block_diff_mask(x, p, block_bytes=block_bytes)
+    np.testing.assert_array_equal(kernel_mask, cpu_mask)
+
+
+# ------------------------------------------------------------------ rwkv6
+def _rwkv_inputs(b, t, h, d, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r = jax.random.normal(ks[0], (b, t, h, d), dtype) * 0.5
+    k = jax.random.normal(ks[1], (b, t, h, d), dtype) * 0.5
+    v = jax.random.normal(ks[2], (b, t, h, d), dtype) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, d), jnp.float32)).astype(dtype)
+    u = jax.random.normal(ks[4], (h, d), jnp.float32) * 0.3
+    return r, k, v, w, u
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,t,h,d", [(1, 40, 2, 16), (2, 50, 1, 32), (1, 97, 2, 16)])
+def test_rwkv6_scan_differential_odd_t(b, t, h, d, dtype):
+    """Sequence lengths that are not a multiple of the default time block:
+    the kernel must clamp its chunk to T and still match the reference."""
+    r, k, v, w, u = _rwkv_inputs(b, t, h, d, dtype)
+    out = rwkv6_scan(r, k, v, w, u)  # default block_t=256 > t
+    ref = rwkv6_reference(
+        jnp.swapaxes(r, 1, 2), jnp.swapaxes(k, 1, 2),
+        jnp.swapaxes(v, 1, 2), jnp.swapaxes(w, 1, 2), u,
+    )
+    ref = jnp.swapaxes(ref, 1, 2)
+    assert out.shape == (b, t, h, d)
+    tol = 1e-4 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("t,bt", [(96, 24), (60, 20), (144, 48)])
+def test_rwkv6_scan_differential_odd_chunks(t, bt):
+    """Non-power-of-two chunk sizes tile T exactly and match both the
+    reference and the single-chunk evaluation."""
+    r, k, v, w, u = _rwkv_inputs(1, t, 2, 16, jnp.float32, seed=3)
+    chunked = rwkv6_scan(r, k, v, w, u, block_t=bt)
+    whole = rwkv6_scan(r, k, v, w, u, block_t=t)
+    ref = rwkv6_reference(
+        jnp.swapaxes(r, 1, 2), jnp.swapaxes(k, 1, 2),
+        jnp.swapaxes(v, 1, 2), jnp.swapaxes(w, 1, 2), u,
+    )
+    ref = jnp.swapaxes(ref, 1, 2)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(whole), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(ref), atol=1e-4, rtol=1e-4)
