@@ -11,10 +11,22 @@ registered fault model (:mod:`repro.core.faults`) against each app of
 ``FAULT_SWEEP_APPS``, emitting per-model S1–S4 breakdowns with and without
 loop-end persistence — how far does the paper's headline claim survive once
 "a crash" stops meaning one clean power failure?
+
+``--robustness-matrix`` asks the deployment-time question the fault sweep
+cannot: a persist plan is *characterized* under one failure flavor (a full
+§5.3 workflow) and then *deployed* under every other.  For each app the
+workflow runs once per fault model, each resulting plan is saved as a
+fingerprinted artifact (:mod:`repro.core.artifacts`), and every
+(characterized-under, deployed-under) pair is replayed — a 5x5 S1–S4
+matrix per app.  Plans characterized under the clean power-fail model
+meeting torn writes in production is exactly the scenario algorithm-directed
+crash-consistency work worries about.
 """
 from __future__ import annotations
 
-from .common import APPS, Timer, campaign_size, campaign_workers, emit
+import os
+
+from .common import APPS, RESULTS_DIR, Timer, campaign_size, campaign_workers, emit
 
 
 def run(fast: bool = True):
@@ -131,13 +143,81 @@ def fault_sweep(fast: bool = True):
     return rows
 
 
+def robustness_matrix(fast: bool = True):
+    """Cross-fault plan robustness: characterize under model A, deploy under
+    model B, for every (A, B) pair — the portable-plan-artifact experiment.
+
+    Characterization uses ``region_measure="paper"`` (two campaigns per
+    workflow) so the matrix stays tractable: 5 workflows + 25 replays per
+    app.  Plans are written to ``results/plans/`` and replayed *through the
+    artifact layer* — the matrix doubles as an end-to-end test of
+    save/load/replay.
+    """
+    from repro.core.faults import all_fault_models
+    from repro.core.artifacts import load_plan, replay_plan, save_plan
+    from repro.core.workflow import run_workflow
+    from repro.hpc.suite import FAULT_SWEEP_APPS, bench_app, ci_app, default_cache
+
+    n = max(16, campaign_size(fast) // 3)
+    workers = campaign_workers()
+    app_names = ("kmeans", "sor") if fast else FAULT_SWEEP_APPS
+    plans_dir = os.path.join(RESULTS_DIR, "plans")
+    rows = []
+    for name in app_names:
+        app = ci_app(name) if fast else bench_app(name)
+        cache = default_cache(app)
+        models = all_fault_models(app)
+        paths = {}
+        for a_name, fault_a in models.items():
+            wf = run_workflow(
+                app, n_tests=n, cache=cache, seed=0, region_measure="paper",
+                n_workers=workers, fault_model=fault_a,
+            )
+            p = os.path.join(plans_dir, f"{name}_{a_name}.json")
+            save_plan(p, wf.plan, app_name=app.name, fault=fault_a,
+                      cache=cache,
+                      meta={"tau": wf.tau,
+                            "expected_recomputability":
+                                wf.region_selection.expected_recomputability})
+            paths[a_name] = p
+        for a_name in models:
+            art = load_plan(paths[a_name])
+            for b_name, fault_b in models.items():
+                with Timer() as t:
+                    camp = replay_plan(art, app, cache=cache, n_tests=n,
+                                       seed=777, fault=fault_b,
+                                       n_workers=workers)
+                fr = camp.class_fractions()
+                rows.append({
+                    "app": name,
+                    "characterized_under": a_name,
+                    "deployed_under": b_name,
+                    "S1": round(fr["S1"], 3),
+                    "S2": round(fr["S2"], 3),
+                    "S3": round(fr["S3"], 3),
+                    "S4": round(fr["S4"], 3),
+                    "plan": "|".join(
+                        f"{k}:{x}" for k, x in sorted(art.plan.region_freq.items())
+                    ),
+                    "seconds": round(t.dt, 1),
+                })
+    emit(rows, "robustness_matrix")
+    return rows
+
+
 if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--fault-sweep", action="store_true",
                     help="per-fault-model S1-S4 breakdowns instead of Fig 3/6")
+    ap.add_argument("--robustness-matrix", action="store_true",
+                    help="characterize a plan under each fault model, replay "
+                         "it under every other (S1-S4 matrix via artifacts)")
     ap.add_argument("--full", action="store_true",
                     help="paper-sized campaigns (default: fast CI sizes)")
     args = ap.parse_args()
-    (fault_sweep if args.fault_sweep else run)(fast=not args.full)
+    if args.robustness_matrix:
+        robustness_matrix(fast=not args.full)
+    else:
+        (fault_sweep if args.fault_sweep else run)(fast=not args.full)

@@ -1,0 +1,75 @@
+"""Workflow orchestrator wall-clock: one shared shard pool vs the historical
+per-campaign engine.
+
+The §5.3 workflow in ``"isolated"`` region mode runs W+2 campaigns.  The
+historical scheduler runs them back-to-back, each spinning up (and tearing
+down) its own process pool and each ending in a straggler barrier; the
+orchestrator flattens every independent campaign into one (campaign, shard)
+task batch on a single pool.  Same inputs, bit-for-bit identical results —
+this benchmark measures the wall-clock difference and verifies the parity
+claim on the way.
+
+Workers default to ``REPRO_WORKERS`` (see ``benchmarks/common.py``) or 4.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from .common import Timer, campaign_size, campaign_workers, emit
+
+
+def _records(wf):
+    return [
+        [dataclasses.asdict(r) for r in camp.records]
+        for camp in (wf.baseline_campaign, wf.best_campaign)
+    ]
+
+
+def run(fast: bool = True):
+    from repro.core.workflow import run_workflow
+    from repro.hpc.suite import bench_app, ci_app, default_cache
+
+    n = max(24, campaign_size(fast) // 2)
+    workers = campaign_workers(default=min(4, os.cpu_count() or 1))
+    apps = ("sor", "kmeans") if fast else ("sor", "kmeans", "mg", "pagerank")
+    rows = []
+    for name in apps:
+        app = ci_app(name) if fast else bench_app(name)
+        cache = default_cache(app)
+        kw = dict(n_tests=n, cache=cache, seed=0, region_measure="isolated",
+                  n_workers=workers)
+        with Timer() as t_serial:
+            serial = run_workflow(app, scheduler="serial", **kw)
+        with Timer() as t_shared:
+            shared = run_workflow(app, scheduler="shared", **kw)
+        parity = (
+            _records(serial) == _records(shared)
+            and serial.summary() == shared.summary()
+            and serial.plan == shared.plan
+        )
+        rows.append({
+            "app": name,
+            "workers": workers,
+            "n_tests": n,
+            "serial_s": round(t_serial.dt, 2),
+            "shared_s": round(t_shared.dt, 2),
+            "speedup": round(t_serial.dt / max(t_shared.dt, 1e-9), 2),
+            "bitwise_parity": parity,
+        })
+        if not parity:
+            raise AssertionError(
+                f"{name}: orchestrated workflow diverged from the serial path"
+            )
+    emit(rows, "workflow_orchestrator")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-sized campaigns (default: fast CI sizes)")
+    args = ap.parse_args()
+    run(fast=not args.full)

@@ -1,11 +1,12 @@
 """Benchmark harness: one module per paper table/figure.
 
-  bench_recomputability — Fig 3 + Fig 6 (and the fault-model sweep)
+  bench_recomputability — Fig 3 + Fig 6 (fault-model sweep, robustness matrix)
   bench_selection       — Fig 4a/4b + Fig 5
   bench_persist_overhead— Table 4
   bench_nvm_writes      — Fig 9
   bench_efficiency      — Fig 10 + Fig 11
   bench_kernels         — Pallas kernels vs oracles (us/call CSV)
+  bench_workflow        — shared-pool orchestrator vs serial workflow engine
   bench_roofline        — §Roofline table from the dry-run artifacts
 
 ``python -m benchmarks.run [--full]`` — default is the fast (CI-sized)
@@ -34,11 +35,14 @@ def main() -> None:
         bench_recomputability,
         bench_roofline,
         bench_selection,
+        bench_workflow,
     )
 
     benches = [
         ("recomputability", bench_recomputability.run),
         ("fault_sweep", bench_recomputability.fault_sweep),
+        ("robustness_matrix", bench_recomputability.robustness_matrix),
+        ("workflow_orchestrator", bench_workflow.run),
         ("selection", bench_selection.run),
         ("persist_overhead", bench_persist_overhead.run),
         ("nvm_writes", bench_nvm_writes.run),

@@ -6,15 +6,18 @@ Runs the full paper pipeline on one app:
   3. Spearman object selection + knapsack region selection
   4. validation campaign with the selected plan
   5. system-efficiency projection at 100k-node scale
+  6. ship the plan as a fingerprinted artifact and replay it from disk
 
 Usage:  PYTHONPATH=src python examples/quickstart.py
 """
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import CrashTester, SystemConfig, efficiency_with, efficiency_without
+from repro.core.artifacts import load_plan, save_plan
 from repro.core.workflow import run_workflow
 from repro.hpc.suite import ci_app, default_cache
 
@@ -53,6 +56,16 @@ def main() -> None:
     ec = efficiency_with(cfg, val.recomputability, t_s=wf.region_selection.total_overhead).efficiency
     print(f"\n100k-node projection (MTBF 12h, T_chk 3200s): "
           f"efficiency {base:.1%} -> {ec:.1%} (+{100*(ec-base):.1f} pts)")
+
+    # step 4 product: the plan travels as a fingerprinted JSON artifact
+    # (repro.core.artifacts); production loads it, verification included
+    plan_path = os.path.join(tempfile.mkdtemp(prefix="easycrash-"), "cg.plan.json")
+    fp = save_plan(plan_path, wf.plan, app_name=app.name, cache=cache,
+                   meta={"tau": wf.tau, "t_s": wf.t_s})
+    art = load_plan(plan_path)  # raises ArtifactError if tampered/truncated
+    assert art.plan == wf.plan
+    print(f"plan artifact: {plan_path} (sha256 {fp[:16]}..., "
+          f"fault={art.fault_spec['model']})")
 
 
 if __name__ == "__main__":

@@ -22,7 +22,7 @@ from .cache_sim import (
     resolve_window_images,
     simulate_window,
 )
-from .campaign_store import CampaignStore, CampaignStoreError
+from .campaign_store import CampaignStore, CampaignStoreError, WorkflowStore
 from .crash_tester import (
     CampaignResult,
     CrashRecord,
@@ -38,8 +38,19 @@ from .faults import (
     MultiCrash,
     PowerFail,
     TornWrite,
+    all_fault_models,
     fault_model_from_spec,
     get_fault_model,
+)
+from .artifacts import (
+    ArtifactError,
+    PlanArtifact,
+    WorkflowArtifact,
+    load_plan,
+    load_workflow,
+    replay_plan,
+    save_plan,
+    save_workflow,
 )
 from .efficiency import (
     SystemConfig,
@@ -52,20 +63,29 @@ from .efficiency import (
 from .manager import EasyCrashManager, FlushPolicy, flatten_state, unflatten_state
 from .regions import IterativeApp, Region, State, VerifyResult
 from .selection import select_objects, select_regions, spearman
-from .workflow import WorkflowResult, run_workflow
+from .workflow import (
+    CampaignSpec,
+    WorkflowOrchestrator,
+    WorkflowResult,
+    run_workflow,
+)
 
 __all__ = [
     "NVMArena", "WriteStats", "DEFAULT_BLOCK_BYTES", "block_diff_mask",
     "inconsistent_rate", "mix_blocks", "num_blocks", "CacheConfig", "Flush",
     "RegionEvents", "Sweep", "TornBlock", "resolve_window_images",
-    "simulate_window", "CampaignStore", "CampaignStoreError", "CampaignResult",
+    "simulate_window", "CampaignStore", "CampaignStoreError", "WorkflowStore",
+    "CampaignResult",
     "CrashRecord", "CrashTester", "PersistPlan", "PlannedTest",
     "FAULT_MODELS", "BitFlip", "CorrelatedRegion", "FaultModel", "MultiCrash",
-    "PowerFail", "TornWrite", "fault_model_from_spec", "get_fault_model",
+    "PowerFail", "TornWrite", "all_fault_models", "fault_model_from_spec",
+    "get_fault_model",
+    "ArtifactError", "PlanArtifact", "WorkflowArtifact", "load_plan",
+    "load_workflow", "replay_plan", "save_plan", "save_workflow",
     "SystemConfig",
     "efficiency_with", "efficiency_without", "scale_mtbf", "tau_threshold",
     "young_interval", "EasyCrashManager", "FlushPolicy", "flatten_state",
     "unflatten_state", "IterativeApp", "Region", "State", "VerifyResult",
-    "select_objects", "select_regions", "spearman", "WorkflowResult",
-    "run_workflow",
+    "select_objects", "select_regions", "spearman",
+    "CampaignSpec", "WorkflowOrchestrator", "WorkflowResult", "run_workflow",
 ]

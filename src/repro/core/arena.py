@@ -22,6 +22,7 @@ from typing import Dict, Iterable, Mapping, Optional
 import numpy as np
 
 from .blocks import DEFAULT_BLOCK_BYTES, block_diff_mask, mix_blocks, obj_num_blocks
+from .durable import durable_replace
 
 
 @dataclass
@@ -146,6 +147,9 @@ class NVMArena:
         self._store[f"__chk__/{name}"] = np.array(value, copy=True)
 
     # -------------------------------------------------------------- durability
+    # Backing files follow the shared durable-replace protocol
+    # (:mod:`repro.core.durable`): ``reattach`` must never see an empty or
+    # torn image, even after power loss mid-rename.
     def _backing_path(self, name: str) -> str:
         safe = name.replace("/", "__")
         return os.path.join(self.backing_dir, f"{safe}.npy")  # type: ignore[arg-type]
@@ -154,9 +158,12 @@ class NVMArena:
         if not self.backing_dir:
             return
         path = self._backing_path(name)
-        tmp = path + ".tmp.npy"  # np.save appends .npy unless present
-        np.save(tmp, self._store[name])
-        os.replace(tmp, path)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.save(f, self._store[name])
+            f.flush()
+            os.fsync(f.fileno())
+        durable_replace(tmp, path)
 
     def save_manifest(self) -> None:
         if not self.backing_dir:
@@ -169,7 +176,9 @@ class NVMArena:
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(manifest, f)
-        os.replace(tmp, path)
+            f.flush()
+            os.fsync(f.fileno())
+        durable_replace(tmp, path)
 
     @classmethod
     def reattach(cls, backing_dir: str) -> "NVMArena":

@@ -1,15 +1,26 @@
-"""Append-only JSONL result store for crash campaigns (resume support).
+"""Append-only JSONL result stores for crash campaigns and workflows.
 
-A campaign writes one header line describing the campaign fingerprint (app,
-plan, cache, seed, test count, engine version), then one line per completed
-*shard* — all crash tests whose crash point falls in the same crash window.
-Shards are the unit of work of the parallel engine and the unit of resume:
-a campaign killed mid-run (fittingly, for this paper) restarts, replays the
-store, and executes only the shards that never landed.
+Two stores share one file discipline:
 
-The file is only ever appended to, with a flush per shard, so the worst a
-crash can leave behind is one torn trailing line — the loader tolerates
-exactly that (and nothing else) by discarding undecodable trailing data.
+* :class:`CampaignStore` — one campaign per file: a header line with the
+  campaign fingerprint, then one line per completed *shard* (all crash tests
+  whose crash point falls in the same crash window).
+* :class:`WorkflowStore` — one §5.3 workflow per file: a workflow header,
+  one ``campaign`` line per member campaign (baseline, persist-everywhere
+  "best", and the per-region isolated campaigns) carrying that campaign's
+  fingerprint, and shard lines tagged with their campaign key.  This is what
+  lets a killed ``run_workflow`` resume executing only the shards that never
+  landed — across *all* of its campaigns, not just the one that was running.
+
+Durability contract: every append is flushed **and fsynced** before the call
+returns (a shard reported "completed" has reached the device, not just the
+page cache), and the directory entry is fsynced when the file is first
+created.  The file is only ever appended to, so the worst a crash can leave
+behind is one torn *trailing* line — the loader tolerates exactly that and
+nothing else.  An undecodable line in the middle of the file is not a torn
+append, it is corruption, and silently dropping it would silently drop a
+shard's results from a resumed campaign; the loader raises
+:class:`CampaignStoreError` instead.
 """
 from __future__ import annotations
 
@@ -20,13 +31,15 @@ import os
 from typing import Dict, List, Mapping, Optional, Tuple
 
 from .crash_tester import CrashRecord
+from .durable import fsync_dir
 
 #: bump when the shard record layout changes; mismatching stores are rejected
 STORE_VERSION = 1
 
 
 class CampaignStoreError(RuntimeError):
-    """Raised when a store exists but belongs to a different campaign."""
+    """Raised when a store exists but belongs to a different campaign, or
+    when its contents are corrupt beyond the tolerated torn trailing line."""
 
 
 def record_to_dict(record: CrashRecord) -> dict:
@@ -45,34 +58,134 @@ def record_from_dict(d: Mapping[str, object]) -> CrashRecord:
     )
 
 
-class CampaignStore:
-    """JSONL store bound to one file path.
+def _json_roundtrip(obj: dict) -> dict:
+    """The stored header went through JSON; compare live dicts in JSON space
+    (tuples become lists, int keys become strings, ...)."""
+    return json.loads(json.dumps(obj))
+
+
+class _JsonlStore:
+    """Shared JSONL plumbing: strict reads, torn-tail repair, fsynced appends."""
+
+    def __init__(self, path: str):
+        self.path = path
+        # parsed-line cache keyed by (mtime_ns, size): a resumed workflow
+        # consults the store several times (header validation, one batch
+        # registration per stage, progress accounting) and each would
+        # otherwise re-decode the full file.  Appends go through _append,
+        # which changes the stat signature and so invalidates naturally.
+        self._cache: Optional[Tuple[Tuple[int, int], List[dict]]] = None
+
+    # ------------------------------------------------------------------ read
+    def _stat_sig(self) -> Optional[Tuple[int, int]]:
+        try:
+            st = os.stat(self.path)
+        except FileNotFoundError:
+            return None
+        return (st.st_mtime_ns, st.st_size)
+
+    def _read_lines(self) -> List[dict]:
+        """Decode every line of the store (cached per file state).
+
+        Callers must treat the returned list and dicts as read-only.
+
+        Tolerates exactly one undecodable *trailing* line (a crash mid-append
+        tears at most the final line; the torn shard simply re-executes).  An
+        undecodable line followed by more data cannot be a torn append —
+        appends are fsynced in order — so it is treated as corruption and
+        raised, never silently dropped.
+        """
+        sig = self._stat_sig()
+        if sig is None:
+            return []
+        if self._cache is not None and self._cache[0] == sig:
+            return self._cache[1]
+        out: List[dict] = []
+        # bytes, decoded per line: a torn append can cut a multi-byte UTF-8
+        # character, which must be handled like any other torn tail rather
+        # than crash the reader with UnicodeDecodeError
+        with io.open(self.path, "rb") as f:
+            raw = [ln.strip() for ln in f.read().split(b"\n")]
+        # trailing blank lines are not data
+        while raw and not raw[-1]:
+            raw.pop()
+        for i, line in enumerate(raw):
+            if not line:
+                continue
+            try:
+                obj = json.loads(line.decode("utf-8"))
+            except (json.JSONDecodeError, UnicodeDecodeError) as e:
+                if i == len(raw) - 1:
+                    continue  # torn trailing line: discard, shard re-executes
+                raise CampaignStoreError(
+                    f"{self.path}: undecodable line {i + 1} of {len(raw)} — "
+                    f"mid-file corruption, refusing to silently drop a shard "
+                    f"({e})"
+                ) from None
+            if not isinstance(obj, dict):
+                # our appends only ever write objects; a decodable non-dict
+                # line cannot be a torn prefix of one (prefixes never decode)
+                raise CampaignStoreError(
+                    f"{self.path}: line {i + 1} of {len(raw)} is not a JSON "
+                    f"object — foreign or corrupt store content"
+                )
+            out.append(obj)
+        self._cache = (sig, out)
+        return out
+
+    # ----------------------------------------------------------------- write
+    def _repair_torn_tail(self) -> None:
+        """Repair an unterminated final line left by a crash mid-append.
+
+        Two cases, matching exactly what :meth:`_read_lines` accepts:
+
+        * the tail *decodes* — every byte of the line landed except the
+          newline (a proper prefix of a serialized JSON object can never
+          itself decode, so a decodable tail is necessarily complete): the
+          reader already treats it as valid data, so terminate it;
+        * the tail does not decode — torn: truncate it.  Truncating — not
+          newline-terminating — matters here: terminated garbage would be
+          buried mid-file by the next append and poison every later read.
+        """
+        if os.path.getsize(self.path) == 0:
+            return
+        with io.open(self.path, "rb+") as f:
+            f.seek(-1, os.SEEK_END)
+            if f.read(1) == b"\n":
+                return
+            f.seek(0)
+            data = f.read()
+            cut = data.rfind(b"\n") + 1
+            try:
+                complete = isinstance(json.loads(data[cut:].decode("utf-8")), dict)
+            except (json.JSONDecodeError, UnicodeDecodeError):
+                complete = False
+            if complete:
+                f.write(b"\n")  # complete line, only the newline was lost
+            else:
+                f.truncate(cut)
+            f.flush()
+            os.fsync(f.fileno())
+
+    def _append(self, obj: dict) -> None:
+        created = not os.path.exists(self.path)
+        if not created:
+            self._repair_torn_tail()
+        with io.open(self.path, "a", encoding="utf-8") as f:
+            f.write(json.dumps(obj) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        if created:
+            # the file's directory entry must survive the crash too
+            fsync_dir(os.path.dirname(os.path.abspath(self.path)))
+
+
+class CampaignStore(_JsonlStore):
+    """JSONL store bound to one campaign.
 
     Typical use is through ``CrashTester.run_campaign(store_path=...)``; the
     class is public so benchmarks can inspect partial campaigns.
     """
-
-    def __init__(self, path: str):
-        self.path = path
-
-    # ------------------------------------------------------------------ read
-    def _read_lines(self) -> List[dict]:
-        if not os.path.exists(self.path):
-            return []
-        out: List[dict] = []
-        with io.open(self.path, "r", encoding="utf-8") as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    out.append(json.loads(line))
-                except json.JSONDecodeError:
-                    # torn line from a crash mid-append: skip it — shard
-                    # lines are self-contained, so the rest of the file is
-                    # still usable (the torn shard just re-executes)
-                    continue
-        return out
 
     def header(self) -> Optional[dict]:
         lines = self._read_lines()
@@ -91,7 +204,6 @@ class CampaignStore:
             ]
         return shards
 
-    # ----------------------------------------------------------------- write
     def load_or_create(self, fingerprint: dict) -> Dict[int, List[Tuple[int, CrashRecord]]]:
         """Validate/initialise the store; return already-completed shards.
 
@@ -118,9 +230,7 @@ class CampaignStore:
         # model (and still refuse any other)
         if "fault" in fingerprint and found.get("fault") is None:
             found["fault"] = {"model": "power-fail"}
-        # compare in JSON space: the header went through a JSON round-trip,
-        # so the live fingerprint must too (tuples become lists, etc.)
-        if found != json.loads(json.dumps(dict(fingerprint))):
+        if found != _json_roundtrip(dict(fingerprint)):
             raise CampaignStoreError(
                 f"{self.path}: store belongs to a different campaign\n"
                 f"  store:    {found}\n  campaign: {fingerprint}"
@@ -134,17 +244,127 @@ class CampaignStore:
             "records": [(int(i), record_to_dict(r)) for i, r in records],
         })
 
-    def _append(self, obj: dict) -> None:
-        # a previous crash may have left a torn, unterminated line at EOF —
-        # terminate it first so this append starts a fresh line
-        needs_newline = False
-        if os.path.exists(self.path) and os.path.getsize(self.path) > 0:
-            with io.open(self.path, "rb") as rf:
-                rf.seek(-1, os.SEEK_END)
-                needs_newline = rf.read(1) != b"\n"
-        with io.open(self.path, "a", encoding="utf-8") as f:
-            if needs_newline:
-                f.write("\n")
-            f.write(json.dumps(obj) + "\n")
-            f.flush()
-            os.fsync(f.fileno())
+
+class WorkflowStore(_JsonlStore):
+    """JSONL store for a whole §5.3 workflow: many campaigns, one file.
+
+    Line taxonomy:
+
+    * ``{"type": "workflow-header", **workflow_fingerprint}`` — first line;
+      binds the file to one ``run_workflow`` invocation (app, problem data,
+      seed, test count, cache, fault model, selection parameters);
+    * ``{"type": "campaign", "key": K, "fingerprint": {...}}`` — registers
+      member campaign ``K`` (``"baseline"``, ``"best"``, ``"region:3"``)
+      with its full campaign fingerprint.  A resumed workflow whose
+      recomputed campaign fingerprint differs (e.g. the critical-object set
+      changed because the code changed) refuses the store rather than mixing
+      incompatible shard results;
+    * ``{"type": "shard", "campaign": K, "shard": S, "records": [...]}`` —
+      one completed shard of campaign ``K``.
+    """
+
+    def header(self) -> Optional[dict]:
+        lines = self._read_lines()
+        if lines and lines[0].get("type") == "workflow-header":
+            return lines[0]
+        return None
+
+    def load_or_create(self, fingerprint: dict) -> None:
+        """Validate the workflow header (write it if the store is new)."""
+        existing = self.header()
+        if existing is None:
+            if self._read_lines():
+                raise CampaignStoreError(
+                    f"{self.path}: not a workflow store (no workflow-header)"
+                )
+            d = os.path.dirname(os.path.abspath(self.path))
+            os.makedirs(d, exist_ok=True)
+            self._append({"type": "workflow-header", **fingerprint})
+            return
+        found = {k: existing.get(k) for k in fingerprint}
+        if found != _json_roundtrip(dict(fingerprint)):
+            raise CampaignStoreError(
+                f"{self.path}: store belongs to a different workflow\n"
+                f"  store:    {found}\n  workflow: {fingerprint}"
+            )
+
+    def campaign_fingerprints(self) -> Dict[str, dict]:
+        out: Dict[str, dict] = {}
+        for line in self._read_lines():
+            if line.get("type") == "campaign":
+                out[str(line["key"])] = dict(line["fingerprint"])
+        return out
+
+    def register_campaigns(
+        self, fingerprints: Mapping[str, dict]
+    ) -> Dict[str, Dict[int, List[Tuple[int, CrashRecord]]]]:
+        """Bind every campaign in ``fingerprints`` to the store; return each
+        campaign's completed shards (empty for fresh campaigns, raising on
+        any fingerprint clash).
+
+        One pass over the file for the whole batch: a resumed isolated-mode
+        workflow registers W+2 campaigns against a store holding every crash
+        record, so decoding the file once per *registration* would cost
+        O(campaigns x store size) before any shard executes.
+        """
+        existing_fp: Dict[str, dict] = {}
+        shards: Dict[str, Dict[int, List[Tuple[int, CrashRecord]]]] = {}
+        for line in self._read_lines():
+            t = line.get("type")
+            if t == "campaign":
+                existing_fp[str(line["key"])] = dict(line["fingerprint"])
+            elif t == "shard":
+                shards.setdefault(str(line["campaign"]), {})[int(line["shard"])] = [
+                    (int(i), record_from_dict(r)) for i, r in line["records"]
+                ]
+        out: Dict[str, Dict[int, List[Tuple[int, CrashRecord]]]] = {}
+        for key, fingerprint in fingerprints.items():
+            existing = existing_fp.get(str(key))
+            if existing is None:
+                self._append({
+                    "type": "campaign", "key": str(key),
+                    "fingerprint": dict(fingerprint),
+                })
+                out[str(key)] = {}
+            elif existing != _json_roundtrip(dict(fingerprint)):
+                raise CampaignStoreError(
+                    f"{self.path}: campaign {key!r} in store does not match "
+                    f"the resumed workflow\n  store:    {existing}\n"
+                    f"  campaign: {fingerprint}"
+                )
+            else:
+                out[str(key)] = shards.get(str(key), {})
+        return out
+
+    def register_campaign(
+        self, key: str, fingerprint: dict
+    ) -> Dict[int, List[Tuple[int, CrashRecord]]]:
+        """Single-campaign convenience wrapper over :meth:`register_campaigns`."""
+        return self.register_campaigns({key: fingerprint})[str(key)]
+
+    def completed_shards(self, key: str) -> Dict[int, List[Tuple[int, CrashRecord]]]:
+        """shard_id -> [(original test index, record)] for campaign ``key``."""
+        return self.completed_shards_by_campaign().get(key, {})
+
+    def completed_shards_by_campaign(
+        self,
+    ) -> Dict[str, Dict[int, List[Tuple[int, CrashRecord]]]]:
+        """campaign key -> {shard_id -> records}, in one pass over the file."""
+        out: Dict[str, Dict[int, List[Tuple[int, CrashRecord]]]] = {}
+        for line in self._read_lines():
+            if line.get("type") != "shard":
+                continue
+            out.setdefault(str(line["campaign"]), {})[int(line["shard"])] = [
+                (int(i), record_from_dict(r)) for i, r in line["records"]
+            ]
+        return out
+
+    def append_shard(
+        self, key: str, shard_id: int, records: List[Tuple[int, CrashRecord]]
+    ) -> None:
+        self._append({
+            "type": "shard",
+            "campaign": str(key),
+            "shard": int(shard_id),
+            "records": [(int(i), record_to_dict(r)) for i, r in records],
+        })

@@ -72,7 +72,7 @@ class PersistPlan:
         return PersistPlan(tuple(objects), {k: 1 for k in range(len(app.regions()))})
 
 
-@dataclass
+@dataclass(frozen=True)
 class CrashRecord:
     iter_idx: int
     region_idx: int
@@ -195,6 +195,18 @@ class CrashTester:
     def golden_iters(self) -> int:
         self._ensure_golden()
         return self._golden_iters
+
+    def release_caches(self) -> None:
+        """Drop the golden trajectory and window-image caches.
+
+        Both re-materialise on demand (``_ensure_golden`` is deterministic),
+        so this only trades recompute for memory — the workflow orchestrator
+        calls it once a campaign's shards are assembled, so W+2 coexisting
+        testers don't pin W+2 full golden trajectories.
+        """
+        self._golden_states = None
+        self._golden_final = None
+        self._window_cache = {}
 
     # ---------------------------------------------------------------- events
     def _tracked_objects(self, state: State) -> List[str]:
@@ -590,86 +602,43 @@ class CrashTester:
             shards.setdefault(t.crash_iter, []).append(t)
         return shards
 
-    def run_campaign(
+    # --------------------------------------------------- shard-level campaign API
+    # run_campaign decomposes into three order-independent pieces so that an
+    # external scheduler (the workflow orchestrator) can interleave shards of
+    # *different* campaigns on one shared worker pool:
+    #   plan_shards       -> the campaign's full shard map (pure planning)
+    #   run_window_tests  -> execute one shard (anywhere, any order)
+    #   assemble_campaign -> deterministic CampaignResult from shard results
+    def plan_shards(
+        self, n_tests: int, seed: Optional[int] = None
+    ) -> Tuple[List[PlannedTest], Dict[int, List[PlannedTest]]]:
+        """Plan a campaign and group it into shards (one per crash window)."""
+        tests = self.plan_campaign(n_tests, seed)
+        return tests, self._shards(tests)
+
+    def payload_picklable(self) -> Tuple[bool, Optional[BaseException]]:
+        """Whether this tester's campaign payload can cross a process
+        boundary (apps holding jitted closures, e.g. LMTrainApp, cannot)."""
+        import pickle
+
+        try:
+            pickle.dumps((self.app, self.plan, self.cache, self.fault))
+            return True, None
+        except Exception as e:  # noqa: BLE001 - any pickling failure
+            return False, e
+
+    def assemble_campaign(
         self,
-        n_tests: int,
-        seed: Optional[int] = None,
-        n_workers: int = 1,
-        store_path: Optional[str] = None,
+        tests: Sequence[PlannedTest],
+        shard_results: Mapping[int, List[Tuple[int, CrashRecord]]],
     ) -> CampaignResult:
-        """Run a crash-test campaign.
+        """Stitch shard results back into a :class:`CampaignResult`.
 
-        * ``n_workers > 1`` fans the campaign's shards (one per crash
-          window) out over a :class:`~concurrent.futures.ProcessPoolExecutor`.
-          All randomness is pre-drawn by :meth:`plan_campaign`, so the result
-          is identical for every worker count — and ``n_workers=1`` (which
-          runs fully in-process) is bit-for-bit the historical serial engine.
-        * ``store_path`` appends each completed shard to a JSONL
-          :class:`~repro.core.campaign_store.CampaignStore`; re-running the
-          same campaign against an existing (possibly truncated) store
-          executes only the missing shards.
+        Records are re-ordered by original test index, so the result is
+        independent of shard execution order (serial, parallel, resumed).
         """
-        eff_seed = self.seed if seed is None else seed
-        tests = self.plan_campaign(n_tests, eff_seed)
-        shards = self._shards(tests)
-
-        store = None
-        done: Dict[int, List[Tuple[int, CrashRecord]]] = {}
-        if store_path is not None:
-            from .campaign_store import CampaignStore
-
-            store = CampaignStore(store_path)
-            done = store.load_or_create(self._fingerprint(n_tests, eff_seed))
-            done = {k: v for k, v in done.items() if k in shards}
-        pending = {ci: ts for ci, ts in shards.items() if ci not in done}
-
-        results: Dict[int, List[Tuple[int, CrashRecord]]] = dict(done)
-        if n_workers > 1 and len(pending) > 1:
-            # apps that hold jitted closures (e.g. LMTrainApp) cannot cross a
-            # process boundary; fall back to the identical serial engine
-            import pickle
-            import warnings
-
-            try:
-                pickle.dumps((self.app, self.plan, self.cache, self.fault))
-            except Exception as e:  # noqa: BLE001 - any pickling failure
-                warnings.warn(
-                    f"{self.app.name}: campaign payload is not picklable "
-                    f"({e!r}); running shards serially", RuntimeWarning,
-                    stacklevel=2,
-                )
-                n_workers = 1
-        if n_workers <= 1 or len(pending) <= 1:
-            for ci, ts in pending.items():
-                recs = self.run_window_tests(ci, ts)
-                if store is not None:
-                    store.append_shard(ci, recs)
-                results[ci] = recs
-        else:
-            import multiprocessing as mp
-
-            # spawn, not fork: jax is multithreaded and forked children
-            # deadlock (REPRO_MP_START exists for non-jax substrates only)
-            ctx = mp.get_context(os.environ.get("REPRO_MP_START", "spawn"))
-            with ProcessPoolExecutor(
-                max_workers=min(n_workers, len(pending)),
-                mp_context=ctx,
-                initializer=_shard_worker_init,
-                initargs=(self.app, self.plan, self.cache, self.seed,
-                          self.max_extra_factor, self.fault),
-            ) as ex:
-                futs = {
-                    ex.submit(_shard_worker_run, ci, ts): ci
-                    for ci, ts in pending.items()
-                }
-                for fut in as_completed(futs):
-                    ci, recs = fut.result()
-                    if store is not None:
-                        store.append_shard(ci, recs)
-                    results[ci] = recs
-
         indexed = sorted(
-            (pair for recs in results.values() for pair in recs),
+            (pair for recs in shard_results.values() for pair in recs),
             key=lambda pair: pair[0],
         )
         records = [r for _, r in indexed]
@@ -695,30 +664,153 @@ class CrashTester:
             window_write_stats=stats,
         )
 
+    def run_campaign(
+        self,
+        n_tests: int,
+        seed: Optional[int] = None,
+        n_workers: int = 1,
+        store_path: Optional[str] = None,
+    ) -> CampaignResult:
+        """Run a crash-test campaign.
+
+        * ``n_workers > 1`` fans the campaign's shards (one per crash
+          window) out over a :class:`~concurrent.futures.ProcessPoolExecutor`.
+          All randomness is pre-drawn by :meth:`plan_campaign`, so the result
+          is identical for every worker count — and ``n_workers=1`` (which
+          runs fully in-process) is bit-for-bit the historical serial engine.
+        * ``store_path`` appends each completed shard to a JSONL
+          :class:`~repro.core.campaign_store.CampaignStore`; re-running the
+          same campaign against an existing (possibly truncated) store
+          executes only the missing shards.
+        """
+        eff_seed = self.seed if seed is None else seed
+        tests, shards = self.plan_shards(n_tests, eff_seed)
+
+        store = None
+        done: Dict[int, List[Tuple[int, CrashRecord]]] = {}
+        if store_path is not None:
+            from .campaign_store import CampaignStore
+
+            store = CampaignStore(store_path)
+            done = store.load_or_create(self._fingerprint(n_tests, eff_seed))
+            done = {k: v for k, v in done.items() if k in shards}
+        pending = {ci: ts for ci, ts in shards.items() if ci not in done}
+
+        results: Dict[int, List[Tuple[int, CrashRecord]]] = dict(done)
+        if n_workers > 1 and len(pending) > 1:
+            # apps that hold jitted closures (e.g. LMTrainApp) cannot cross a
+            # process boundary; fall back to the identical serial engine
+            import warnings
+
+            ok, err = self.payload_picklable()
+            if not ok:
+                warnings.warn(
+                    f"{self.app.name}: campaign payload is not picklable "
+                    f"({err!r}); running shards serially", RuntimeWarning,
+                    stacklevel=2,
+                )
+                n_workers = 1
+        if n_workers <= 1 or len(pending) <= 1:
+            for ci, ts in pending.items():
+                recs = self.run_window_tests(ci, ts)
+                if store is not None:
+                    store.append_shard(ci, recs)
+                results[ci] = recs
+        else:
+            with campaign_executor(
+                n_workers=min(n_workers, len(pending)),
+                app=self.app, cache=self.cache,
+                max_extra_factor=self.max_extra_factor, fault=self.fault,
+            ) as ex:
+                futs = {
+                    ex.submit(_shard_worker_run, "", self.plan, self.seed, ci, ts): ci
+                    for ci, ts in pending.items()
+                }
+                for fut in as_completed(futs):
+                    _, ci, recs = fut.result()
+                    if store is not None:
+                        store.append_shard(ci, recs)
+                    results[ci] = recs
+
+        return self.assemble_campaign(tests, results)
+
 
 # ------------------------------------------------------------- worker plumbing
-# One CrashTester per worker process, built by the pool initializer: the
-# golden run and window simulations are paid once per process, then amortised
-# across every shard that process executes.
-_WORKER_TESTER: Optional[CrashTester] = None
+# Each worker process hosts a *cache of CrashTesters*, keyed by campaign: the
+# pool initializer pins the shared payload (app, cache model, fault model) and
+# every submitted shard names its campaign (persist plan + seed).  A single-
+# campaign run uses one key; the workflow orchestrator multiplexes all of a
+# workflow's campaigns over the same pool, so a worker pays each campaign's
+# golden run once and then amortises it across every shard it executes.
+_WORKER_HOST: Optional[Tuple[IterativeApp, CacheConfig, float, Optional[FaultModel]]] = None
+_WORKER_TESTERS: "OrderedDict[str, Tuple[PersistPlan, int, CrashTester]]" = None  # type: ignore[assignment]
+#: LRU bound on coexisting per-campaign testers in one worker: each pins a
+#: full golden trajectory, so an unbounded cache would multiply resident
+#: memory by the campaign count (isolated-mode workflows run W+2 campaigns).
+#: Evicting only costs a deterministic golden re-run if that campaign's
+#: shards come back around.
+_WORKER_TESTER_CAP = 8
 
 
 def _shard_worker_init(
     app: IterativeApp,
-    plan: PersistPlan,
     cache: CacheConfig,
-    seed: int,
     max_extra_factor: float,
     fault: Optional[FaultModel] = None,
 ) -> None:
-    global _WORKER_TESTER
-    _WORKER_TESTER = CrashTester(
-        app, plan, cache, seed=seed, max_extra_factor=max_extra_factor, fault=fault
-    )
+    global _WORKER_HOST, _WORKER_TESTERS
+    from collections import OrderedDict
+
+    _WORKER_HOST = (app, cache, max_extra_factor, fault)
+    _WORKER_TESTERS = OrderedDict()
 
 
 def _shard_worker_run(
-    crash_iter: int, tests: Sequence[PlannedTest]
-) -> Tuple[int, List[Tuple[int, CrashRecord]]]:
-    assert _WORKER_TESTER is not None, "worker used before initialization"
-    return crash_iter, _WORKER_TESTER.run_window_tests(crash_iter, tests)
+    campaign_key: str,
+    plan: PersistPlan,
+    seed: int,
+    crash_iter: int,
+    tests: Sequence[PlannedTest],
+) -> Tuple[str, int, List[Tuple[int, CrashRecord]]]:
+    assert _WORKER_HOST is not None, "worker used before initialization"
+    cached = _WORKER_TESTERS.get(campaign_key)
+    # the cache is keyed by campaign key but *validated* against the plan and
+    # seed each shard carries: a rebound key must never reuse a stale tester
+    if cached is not None and (cached[0], cached[1]) == (plan, seed):
+        tester = cached[2]
+    else:
+        app, cache, max_extra_factor, fault = _WORKER_HOST
+        tester = CrashTester(
+            app, plan, cache, seed=seed,
+            max_extra_factor=max_extra_factor, fault=fault,
+        )
+        _WORKER_TESTERS[campaign_key] = (plan, seed, tester)
+        while len(_WORKER_TESTERS) > _WORKER_TESTER_CAP:
+            _WORKER_TESTERS.popitem(last=False)
+    _WORKER_TESTERS.move_to_end(campaign_key)
+    return campaign_key, crash_iter, tester.run_window_tests(crash_iter, tests)
+
+
+def campaign_executor(
+    n_workers: int,
+    app: IterativeApp,
+    cache: CacheConfig,
+    max_extra_factor: float = 2.0,
+    fault: Optional[FaultModel] = None,
+) -> ProcessPoolExecutor:
+    """A shard worker pool bound to one (app, cache, fault) payload.
+
+    Submit shards with ``ex.submit(_shard_worker_run, key, plan, seed, ci,
+    tests)`` — campaigns with distinct keys coexist on the same pool.
+    """
+    import multiprocessing as mp
+
+    # spawn, not fork: jax is multithreaded and forked children
+    # deadlock (REPRO_MP_START exists for non-jax substrates only)
+    ctx = mp.get_context(os.environ.get("REPRO_MP_START", "spawn"))
+    return ProcessPoolExecutor(
+        max_workers=n_workers,
+        mp_context=ctx,
+        initializer=_shard_worker_init,
+        initargs=(app, cache, max_extra_factor, fault),
+    )

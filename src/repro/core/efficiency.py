@@ -39,7 +39,7 @@ class SystemConfig:
         return self.t_chk  # T_r = T_chk (paper assumption, after [7])
 
 
-@dataclass
+@dataclass(frozen=True)
 class EfficiencyResult:
     efficiency: float
     n_checkpoints: float

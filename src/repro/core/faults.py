@@ -315,9 +315,16 @@ def get_fault_model(name: str, app=None, **overrides) -> FaultModel:
     return cls(**params)
 
 
+def all_fault_models(app=None) -> Dict[str, FaultModel]:
+    """Every registered model, instantiated with ``app``'s
+    ``fault_defaults`` applied — the sweep and robustness-matrix benchmarks'
+    canonical way to enumerate failure flavors."""
+    return {name: get_fault_model(name, app=app) for name in sorted(FAULT_MODELS)}
+
+
 def fault_model_from_spec(spec: Mapping[str, object]) -> FaultModel:
     """Inverse of :meth:`FaultModel.spec` (e.g. to rehydrate from a store
-    header)."""
+    header or a plan artifact)."""
     d = dict(spec)
     name = str(d.pop("model"))
     return get_fault_model(name, **d)

@@ -35,7 +35,7 @@ class Region:
     hot_reads: Tuple[str, ...] = ()      # small objects re-read continuously
 
 
-@dataclass
+@dataclass(frozen=True)
 class VerifyResult:
     passed: bool
     metric: float

@@ -127,7 +127,12 @@ def spearman(x: Sequence[float], y: Sequence[float]) -> Tuple[float, float]:
 
 
 # ---------------------------------------------------------- object selection
-@dataclass
+# Result/value dataclasses in core/ are frozen: several (CacheConfig,
+# PersistPlan) appear as shared default parameter values, and the rest are
+# outputs whose silent in-place mutation would desynchronise stores,
+# fingerprints and artifacts.  Mutable-by-design counters (WriteStats,
+# ManagerStats) stay unfrozen.
+@dataclass(frozen=True)
 class ObjectScore:
     name: str
     rs: float
@@ -155,7 +160,7 @@ def critical_objects(scores: Sequence[ObjectScore]) -> Tuple[str, ...]:
 
 
 # ---------------------------------------------------------- region selection
-@dataclass
+@dataclass(frozen=True)
 class RegionChoice:
     region_idx: int
     freq: int            # flush every `freq` iterations
@@ -163,7 +168,7 @@ class RegionChoice:
     overhead: float      # l_k / freq
 
 
-@dataclass
+@dataclass(frozen=True)
 class RegionSelection:
     choices: List[RegionChoice]
     expected_recomputability: float   # Y' of Eq. 2

@@ -10,16 +10,39 @@ Step 4 — production: run with the resulting :class:`PersistPlan`.
 
 ``run_workflow`` executes steps 1–3 and returns everything a production run
 (or the benchmarks reproducing the paper's figures) needs.
+
+Orchestration: a workflow is not one campaign but W+2 of them (baseline,
+persist-everywhere, and — in ``"isolated"`` mode — one per region).  The
+default ``scheduler="shared"`` flattens all of them into a single task graph
+of (campaign, shard) units executed on **one** shared process pool: the only
+true barrier is after the baseline campaign (step 2's Spearman selection
+decides what the remaining campaigns persist); past it, every shard of every
+remaining campaign interleaves freely.  ``scheduler="serial"`` is the
+historical engine (each campaign back-to-back with its own pool); results
+are bit-for-bit identical between the two, at every worker count.
+
+``store_path=`` appends each completed shard to a
+:class:`~repro.core.campaign_store.WorkflowStore`; a killed ``run_workflow``
+resumes from it and executes only the shards that never landed.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from concurrent.futures import as_completed
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .cache_sim import CacheConfig
-from .crash_tester import CampaignResult, CrashTester, PersistPlan
+from .crash_tester import (
+    CampaignResult,
+    CrashRecord,
+    CrashTester,
+    PersistPlan,
+    PlannedTest,
+    _shard_worker_run,
+    campaign_executor,
+)
 from .efficiency import SystemConfig, tau_threshold
 from .faults import FaultModel
 from .regions import IterativeApp
@@ -32,8 +55,197 @@ from .selection import (
     select_regions_from_gains,
 )
 
+#: bump when the workflow-store line layout changes
+WORKFLOW_STORE_VERSION = 1
 
-@dataclass
+
+@dataclass(frozen=True)
+class CampaignSpec:
+    """One campaign of a workflow's task graph, identified by ``key``
+    (``"baseline"``, ``"best"``, ``"region:<k>"``)."""
+
+    key: str
+    plan: PersistPlan
+    seed: int
+    n_tests: int
+
+
+class _PerCampaignRunner:
+    """The historical scheduler: each campaign runs to completion on its own
+    pool (``CrashTester.run_campaign``), strictly in submission order."""
+
+    def __init__(self, app, cache, fault, n_workers, max_extra_factor=2.0):
+        self.app, self.cache, self.fault = app, cache, fault
+        self.n_workers = n_workers
+        self.max_extra_factor = max_extra_factor
+
+    def run(self, specs: Sequence[CampaignSpec]) -> Dict[str, CampaignResult]:
+        out: Dict[str, CampaignResult] = {}
+        for s in specs:
+            out[s.key] = CrashTester(
+                self.app, s.plan, self.cache, seed=s.seed,
+                max_extra_factor=self.max_extra_factor, fault=self.fault,
+            ).run_campaign(s.n_tests, n_workers=self.n_workers)
+        return out
+
+    def close(self) -> None:
+        pass
+
+
+class WorkflowOrchestrator:
+    """Shared-pool scheduler for a workflow's (campaign, shard) task graph.
+
+    * One :class:`~concurrent.futures.ProcessPoolExecutor` for the whole
+      workflow: workers are spawned once (not once per campaign) and each
+      worker hosts one :class:`CrashTester` per campaign it has seen, so
+      per-campaign golden runs are paid at most once per worker.
+    * Shards of different campaigns in the same :meth:`run` batch interleave
+      freely — a straggler window of one region's campaign no longer blocks
+      every other region's campaign from starting.
+    * All campaign randomness is pre-drawn at planning time, so scheduling
+      (order, worker count, resume) cannot change any result.
+    * With a :class:`~repro.core.campaign_store.WorkflowStore` attached,
+      completed shards are durably appended as they land and a resumed
+      workflow executes only the missing ones.
+    """
+
+    def __init__(
+        self,
+        app: IterativeApp,
+        cache: CacheConfig,
+        fault: Optional[FaultModel],
+        n_workers: int = 1,
+        store=None,
+        shard_callback: Optional[Callable[[str, int], None]] = None,
+        max_extra_factor: float = 2.0,
+    ):
+        self.app, self.cache, self.fault = app, cache, fault
+        self.n_workers = n_workers
+        self.store = store
+        self.shard_callback = shard_callback
+        self.max_extra_factor = max_extra_factor
+        self._testers: Dict[str, Tuple[CampaignSpec, CrashTester]] = {}
+        self._ex = None
+        self._pickle_checked = False
+
+    # ------------------------------------------------------------- plumbing
+    def tester(self, spec: CampaignSpec) -> CrashTester:
+        """The parent-side tester of one campaign (planning + assembly).
+
+        A campaign key names one identity for the orchestrator's lifetime:
+        parent and worker caches are keyed by it, so silently rebinding a
+        key to a different plan/seed would hand back results computed under
+        the old campaign.
+        """
+        cached = self._testers.get(spec.key)
+        if cached is not None:
+            prev, t = cached
+            if (prev.plan, prev.seed) != (spec.plan, spec.seed):
+                raise ValueError(
+                    f"campaign key {spec.key!r} already bound to a different "
+                    f"plan/seed in this orchestrator; use a fresh key"
+                )
+            return t
+        t = CrashTester(
+            self.app, spec.plan, self.cache, seed=spec.seed,
+            max_extra_factor=self.max_extra_factor, fault=self.fault,
+        )
+        self._testers[spec.key] = (spec, t)
+        return t
+
+    def _pool(self):
+        if self._ex is None:
+            self._ex = campaign_executor(
+                n_workers=self.n_workers, app=self.app, cache=self.cache,
+                max_extra_factor=self.max_extra_factor, fault=self.fault,
+            )
+        return self._ex
+
+    def _use_pool(self, n_pending: int) -> bool:
+        if self.n_workers <= 1 or n_pending <= 1:
+            return False
+        if self._ex is not None:
+            return True
+        if not self._pickle_checked:
+            self._pickle_checked = True
+            ok, err = CrashTester(
+                self.app, PersistPlan.none(), self.cache, fault=self.fault
+            ).payload_picklable()
+            if not ok:
+                import warnings
+
+                warnings.warn(
+                    f"{self.app.name}: workflow payload is not picklable "
+                    f"({err!r}); running shards serially", RuntimeWarning,
+                    stacklevel=3,
+                )
+                self.n_workers = 1
+        return self.n_workers > 1
+
+    # ------------------------------------------------------------ execution
+    def run(self, specs: Sequence[CampaignSpec]) -> Dict[str, CampaignResult]:
+        """Execute a batch of campaigns, interleaving their shards."""
+        planned: Dict[str, Tuple[List[PlannedTest], Dict[int, List[PlannedTest]]]] = {}
+        results: Dict[str, Dict[int, List[Tuple[int, CrashRecord]]]] = {}
+        pending: List[Tuple[CampaignSpec, int, List[PlannedTest]]] = []
+        for spec in specs:
+            planned[spec.key] = self.tester(spec).plan_shards(spec.n_tests, spec.seed)
+        stored: Dict[str, Dict[int, List[Tuple[int, CrashRecord]]]] = {}
+        if self.store is not None:
+            # one store pass registers/validates the whole batch
+            stored = self.store.register_campaigns({
+                spec.key: self.tester(spec)._fingerprint(spec.n_tests, spec.seed)
+                for spec in specs
+            })
+        for spec in specs:
+            tests, shards = planned[spec.key]
+            done = {
+                k: v for k, v in stored.get(spec.key, {}).items() if k in shards
+            }
+            results[spec.key] = done
+            for ci, ts in shards.items():
+                if ci not in done:
+                    pending.append((spec, ci, ts))
+
+        if self._use_pool(len(pending)):
+            ex = self._pool()
+            futs = {
+                ex.submit(_shard_worker_run, spec.key, spec.plan, spec.seed, ci, ts):
+                    spec.key
+                for spec, ci, ts in pending
+            }
+            for fut in as_completed(futs):
+                key, ci, recs = fut.result()
+                self._land(key, ci, recs, results)
+        else:
+            for spec, ci, ts in pending:
+                recs = self.tester(spec).run_window_tests(ci, ts)
+                self._land(spec.key, ci, recs, results)
+
+        out = {
+            key: self._testers[key][1].assemble_campaign(planned[key][0], results[key])
+            for key in planned
+        }
+        for key in planned:
+            # the campaign is assembled; don't keep W+2 golden trajectories
+            # pinned in the parent for the rest of the workflow
+            self._testers[key][1].release_caches()
+        return out
+
+    def _land(self, key, ci, recs, results) -> None:
+        if self.store is not None:
+            self.store.append_shard(key, ci, recs)
+        results[key][ci] = recs
+        if self.shard_callback is not None:
+            self.shard_callback(key, ci)
+
+    def close(self) -> None:
+        if self._ex is not None:
+            self._ex.shutdown()
+            self._ex = None
+
+
+@dataclass(frozen=True)
 class WorkflowResult:
     app_name: str
     baseline_campaign: CampaignResult          # step 1: no persistence
@@ -112,10 +324,39 @@ def region_time_fractions(app: IterativeApp, block_bytes: int = 64) -> List[floa
     return [x / s for x in t]
 
 
+def workflow_fingerprint(
+    app: IterativeApp,
+    baseline_tester: CrashTester,
+    n_tests: int,
+    seed: int,
+    cache: CacheConfig,
+    region_measure: str,
+    t_s: float,
+    p_threshold: float,
+    freq_options: Sequence[int],
+    fault: FaultModel,
+) -> Dict[str, object]:
+    """Identity of a workflow for the resume store (JSON-round-trip safe)."""
+    return {
+        "workflow_store_version": WORKFLOW_STORE_VERSION,
+        "app": app.name,
+        "state_digest": baseline_tester._state_digest(),
+        "n_tests": int(n_tests),
+        "seed": int(seed),
+        "region_measure": str(region_measure),
+        "t_s": float(t_s),
+        "p_threshold": float(p_threshold),
+        "freq_options": [int(x) for x in freq_options],
+        "cache_blocks": int(cache.capacity_blocks),
+        "block_bytes": int(cache.block_bytes),
+        "fault": fault.spec(),
+    }
+
+
 def run_workflow(
     app: IterativeApp,
     n_tests: int = 200,
-    cache: CacheConfig = CacheConfig(),
+    cache: CacheConfig = CacheConfig(),  # frozen dataclass: safe shared default
     system: Optional[SystemConfig] = None,
     t_s: float = 0.03,
     p_threshold: float = 0.01,
@@ -124,12 +365,30 @@ def run_workflow(
     region_measure: str = "isolated",
     n_workers: int = 1,
     fault_model: Optional[FaultModel] = None,
+    scheduler: str = "shared",
+    store_path: Optional[str] = None,
+    shard_callback: Optional[Callable[[str, int], None]] = None,
 ) -> WorkflowResult:
     """Steps 1–3.
 
-    ``n_workers`` is handed to every campaign the workflow runs
-    (:meth:`repro.core.crash_tester.CrashTester.run_campaign`); results are
-    identical for every worker count.
+    ``n_workers`` workers execute the workflow's crash-test shards; results
+    are identical for every worker count.
+
+    ``scheduler`` selects how the workflow's W+2 campaigns are executed:
+
+    * ``"shared"`` (default) — the :class:`WorkflowOrchestrator`: one shared
+      process pool for every campaign, shards of independent campaigns
+      interleaved;
+    * ``"serial"`` — the historical path: each campaign back-to-back through
+      :meth:`~repro.core.crash_tester.CrashTester.run_campaign`, each with
+      its own pool.  Bit-for-bit identical results, slower wall-clock.
+
+    ``store_path`` (``"shared"`` scheduler only) appends every completed
+    shard to a :class:`~repro.core.campaign_store.WorkflowStore`: kill the
+    workflow at any point, re-run the same call, and only the missing shards
+    execute.  ``shard_callback(campaign_key, shard_id)`` fires after each
+    executed shard has been durably stored (progress reporting, crash
+    injection in tests).
 
     ``fault_model`` selects what a "crash" is for every campaign the
     workflow runs (:mod:`repro.core.faults`); ``None`` is the paper's clean
@@ -146,63 +405,100 @@ def run_workflow(
       region only (the paper's own Fig 4b methodology).  Costs W extra
       campaigns but measures the true marginal gain of each region.
     """
+    if region_measure not in ("paper", "isolated"):
+        raise ValueError(f"unknown region_measure {region_measure!r}")
+    if scheduler not in ("shared", "serial"):
+        raise ValueError(f"unknown scheduler {scheduler!r}")
+    if scheduler != "shared" and (store_path is not None or shard_callback is not None):
+        raise ValueError("store_path/shard_callback require the 'shared' scheduler")
     system = system or SystemConfig(mtbf=12 * 3600.0, t_chk=320.0)
     tau = tau_threshold(system, t_s=t_s)
 
-    # Step 1: baseline campaign (NVM holds whatever eviction left there).
-    baseline = CrashTester(
-        app, PersistPlan.none(), cache, seed=seed, fault=fault_model
-    ).run_campaign(n_tests, n_workers=n_workers)
-
-    # Step 2: Spearman object selection.  The loop iterator is excluded: it
-    # is *always* persisted (paper fn. 3), never subject to selection.
-    sel_candidates = [c for c in app.candidates if c != app.iterator_object]
-    scores = select_objects(baseline, sel_candidates, p_threshold)
-    crit = critical_objects(scores)
-    if not crit:
-        # fall back to the most negatively-correlated object: persisting
-        # nothing would make step 3 vacuous (paper always persists >=1 object)
-        ranked = sorted(
-            (s for s in scores if not np.isnan(s.rs)), key=lambda s: s.rs
-        )
-        crit = (ranked[0].name,) if ranked else tuple(sel_candidates[:1])
-
-    # Step 3: measure per-region recomputability with persistence, then
-    # solve the knapsack.
-    n_regions = len(app.regions())
-    a = region_time_fractions(app, cache.block_bytes)
-    l = estimate_region_overheads(app, crit, block_bytes=cache.block_bytes)
-    best_plan = PersistPlan.best(crit, app)
-    best = CrashTester(app, best_plan, cache, seed=seed + 1, fault=fault_model).run_campaign(
-        n_tests, n_workers=n_workers
-    )
-
-    if region_measure == "paper":
-        c_base_map = baseline.per_region_recomputability()
-        c_max_map = best.per_region_recomputability()
-        c_base = [c_base_map.get(k, (baseline.recomputability, 0))[0] for k in range(n_regions)]
-        c_max = [
-            max(c_max_map.get(k, (best.recomputability, 0))[0], c_base[k])
-            for k in range(n_regions)
-        ]
-        sel = select_regions(a, c_base, c_max, l, t_s=t_s, tau=tau, freq_options=freq_options)
-    elif region_measure == "isolated":
-        gains = {}
-        overheads = {}
-        per_region_n = max(30, n_tests // 2)
-        for k in range(n_regions):
-            plan_k = PersistPlan(objects=crit, region_freq={k: 1})
-            camp_k = CrashTester(
-                app, plan_k, cache, seed=seed + 2 + k, fault=fault_model
-            ).run_campaign(per_region_n, n_workers=n_workers)
-            gains[k] = camp_k.recomputability - baseline.recomputability
-            overheads[k] = l[k]
-        sel = select_regions_from_gains(
-            gains, overheads, baseline.recomputability, t_s=t_s, tau=tau,
-            freq_options=freq_options,
-        )
+    if scheduler == "serial":
+        runner = _PerCampaignRunner(app, cache, fault_model, n_workers)
     else:
-        raise ValueError(f"unknown region_measure {region_measure!r}")
+        store = None
+        runner = WorkflowOrchestrator(
+            app, cache, fault_model, n_workers,
+            shard_callback=shard_callback,
+        )
+        if store_path is not None:
+            from .campaign_store import WorkflowStore
+            from .faults import PowerFail
+
+            store = WorkflowStore(store_path)
+            store.load_or_create(workflow_fingerprint(
+                app,
+                runner.tester(CampaignSpec("baseline", PersistPlan.none(), seed, n_tests)),
+                n_tests, seed, cache, region_measure, t_s, p_threshold,
+                freq_options, fault_model if fault_model is not None else PowerFail(),
+            ))
+            runner.store = store
+
+    try:
+        # Step 1: baseline campaign (NVM holds whatever eviction left there).
+        # This is the task graph's one true barrier: step 2's selection (and
+        # therefore every later campaign's persist plan) depends on it.
+        baseline = runner.run(
+            [CampaignSpec("baseline", PersistPlan.none(), seed, n_tests)]
+        )["baseline"]
+
+        # Step 2: Spearman object selection.  The loop iterator is excluded:
+        # it is *always* persisted (paper fn. 3), never subject to selection.
+        sel_candidates = [c for c in app.candidates if c != app.iterator_object]
+        scores = select_objects(baseline, sel_candidates, p_threshold)
+        crit = critical_objects(scores)
+        if not crit:
+            # fall back to the most negatively-correlated object: persisting
+            # nothing would make step 3 vacuous (paper always persists >=1)
+            ranked = sorted(
+                (s for s in scores if not np.isnan(s.rs)), key=lambda s: s.rs
+            )
+            crit = (ranked[0].name,) if ranked else tuple(sel_candidates[:1])
+
+        # Step 3: measure per-region recomputability with persistence, then
+        # solve the knapsack.  Every remaining campaign is independent, so
+        # the shared scheduler flattens them into one interleaved shard batch.
+        n_regions = len(app.regions())
+        a = region_time_fractions(app, cache.block_bytes)
+        l = estimate_region_overheads(app, crit, block_bytes=cache.block_bytes)
+        specs = [CampaignSpec("best", PersistPlan.best(crit, app), seed + 1, n_tests)]
+        if region_measure == "isolated":
+            per_region_n = max(30, n_tests // 2)
+            specs += [
+                CampaignSpec(
+                    f"region:{k}",
+                    PersistPlan(objects=crit, region_freq={k: 1}),
+                    seed + 2 + k,
+                    per_region_n,
+                )
+                for k in range(n_regions)
+            ]
+        campaigns = runner.run(specs)
+        best = campaigns["best"]
+
+        if region_measure == "paper":
+            c_base_map = baseline.per_region_recomputability()
+            c_max_map = best.per_region_recomputability()
+            c_base = [c_base_map.get(k, (baseline.recomputability, 0))[0] for k in range(n_regions)]
+            c_max = [
+                max(c_max_map.get(k, (best.recomputability, 0))[0], c_base[k])
+                for k in range(n_regions)
+            ]
+            sel = select_regions(a, c_base, c_max, l, t_s=t_s, tau=tau, freq_options=freq_options)
+        else:
+            gains = {}
+            overheads = {}
+            for k in range(n_regions):
+                camp_k = campaigns[f"region:{k}"]
+                gains[k] = camp_k.recomputability - baseline.recomputability
+                overheads[k] = l[k]
+            sel = select_regions_from_gains(
+                gains, overheads, baseline.recomputability, t_s=t_s, tau=tau,
+                freq_options=freq_options,
+            )
+    finally:
+        runner.close()
 
     plan = PersistPlan(objects=crit, region_freq=sel.plan_freqs())
     return WorkflowResult(

@@ -1,0 +1,205 @@
+"""Plan/workflow artifacts: round-trip, fingerprint rejection, replay."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.core import CrashTester, PersistPlan
+from repro.core.artifacts import (
+    ArtifactError,
+    load_plan,
+    load_workflow,
+    plan_from_payload,
+    plan_to_payload,
+    replay_plan,
+    save_plan,
+    save_workflow,
+)
+from repro.core.faults import PowerFail, TornWrite
+from repro.core.workflow import run_workflow
+from repro.hpc.suite import ci_app, default_cache
+
+
+@pytest.fixture(scope="module")
+def km_setup():
+    app = ci_app("kmeans")
+    return app, default_cache(app)
+
+
+@pytest.fixture(scope="module")
+def km_workflow(km_setup):
+    app, cache = km_setup
+    return run_workflow(app, n_tests=14, cache=cache, seed=0,
+                        region_measure="paper")
+
+
+def test_plan_payload_round_trip():
+    plan = PersistPlan(objects=("u", "r"), region_freq={2: 4, 0: 1})
+    assert plan_from_payload(plan_to_payload(plan)) == plan
+    assert plan_from_payload(json.loads(json.dumps(plan_to_payload(plan)))) == plan
+    assert plan_from_payload(plan_to_payload(PersistPlan.none())) == PersistPlan.none()
+
+
+def test_plan_artifact_round_trip(km_setup, km_workflow, tmp_path):
+    app, _ = km_setup
+    wf = km_workflow
+    path = str(tmp_path / "plan.json")
+    fp = save_plan(path, wf.plan, app_name=app.name, fault=TornWrite(depth=3),
+                   meta={"tau": wf.tau})
+    art = load_plan(path)
+    assert art.plan == wf.plan
+    assert art.app_name == app.name
+    assert art.fingerprint == fp
+    assert art.fault == TornWrite(depth=3)
+    assert art.meta["tau"] == wf.tau
+    # saving the identical payload is deterministic
+    assert save_plan(str(tmp_path / "p2.json"), wf.plan, app_name=app.name,
+                     fault=TornWrite(depth=3), meta={"tau": wf.tau}) == fp
+
+
+def test_artifact_rejects_tampering(km_setup, km_workflow, tmp_path):
+    app, _ = km_setup
+    path = str(tmp_path / "plan.json")
+    save_plan(path, km_workflow.plan, app_name=app.name)
+    doc = json.load(open(path))
+    doc["payload"]["plan"]["objects"] = ["weights"]  # the hand-edited plan
+    json.dump(doc, open(path, "w"))
+    with pytest.raises(ArtifactError, match="fingerprint mismatch"):
+        load_plan(path)
+    # truncation / non-JSON
+    with open(path, "w") as f:
+        f.write(json.dumps(doc)[: 40])
+    with pytest.raises(ArtifactError, match="unreadable"):
+        load_plan(path)
+    # binary garbage (invalid UTF-8) is ArtifactError too, not UnicodeDecodeError
+    with open(path, "wb") as f:
+        f.write(b"\xff\xfe\x00garbage")
+    with pytest.raises(ArtifactError, match="unreadable"):
+        load_plan(path)
+    # wrong kind
+    path2 = str(tmp_path / "wf.json")
+    save_workflow(path2, km_workflow)
+    with pytest.raises(ArtifactError, match="not a"):
+        load_plan(path2)
+    # mangled version field must raise ArtifactError, not TypeError
+    save_plan(path, km_workflow.plan, app_name=app.name)
+    doc = json.load(open(path))
+    doc["version"] = None
+    json.dump(doc, open(path, "w"))
+    with pytest.raises(ArtifactError, match="version"):
+        load_plan(path)
+
+
+def test_workflow_artifact_round_trip(km_setup, km_workflow, tmp_path):
+    app, _ = km_setup
+    wf = km_workflow
+    path = str(tmp_path / "wf.json")
+    save_workflow(path, wf, fault=PowerFail())
+    art = load_workflow(path)
+    assert art.plan == wf.plan
+    assert art.critical == wf.critical
+    assert art.summary == wf.summary()
+    assert art.tau == wf.tau and art.t_s == wf.t_s
+    assert art.campaign_fractions["baseline"] == \
+           wf.baseline_campaign.class_fractions()
+    assert [s["name"] for s in art.object_scores] == \
+           [s.name for s in wf.object_scores]
+    assert art.fault == PowerFail()
+
+
+def test_replay_plan_reproduces_direct_campaign(km_setup, km_workflow, tmp_path):
+    """Replaying a loaded artifact == running CrashTester with the plan."""
+    app, cache = km_setup
+    wf = km_workflow
+    path = str(tmp_path / "plan.json")
+    save_plan(path, wf.plan, app_name=app.name)
+    replayed = replay_plan(path, app, cache=cache, n_tests=10, seed=5)
+    direct = CrashTester(app, wf.plan, cache, seed=5).run_campaign(10)
+    assert [dataclasses.asdict(r) for r in replayed.records] == \
+           [dataclasses.asdict(r) for r in direct.records]
+
+
+def test_replay_plan_under_other_fault(km_setup, km_workflow, tmp_path):
+    """The cross-fault experiment: fault=None replays the characterization
+    model; an explicit model overrides it."""
+    app, cache = km_setup
+    path = str(tmp_path / "plan.json")
+    save_plan(path, km_workflow.plan, app_name=app.name, fault=TornWrite())
+    under_torn = replay_plan(path, app, cache=cache, n_tests=8, seed=5)
+    direct = CrashTester(app, km_workflow.plan, cache, seed=5,
+                         fault=TornWrite()).run_campaign(8)
+    assert [dataclasses.asdict(r) for r in under_torn.records] == \
+           [dataclasses.asdict(r) for r in direct.records]
+    under_power = replay_plan(path, app, cache=cache, n_tests=8, seed=5,
+                              fault=PowerFail())
+    assert [dataclasses.asdict(r) for r in under_power.records] != \
+           [dataclasses.asdict(r) for r in under_torn.records]
+
+
+def test_artifact_records_cache_and_replay_defaults_to_it(km_setup, km_workflow, tmp_path):
+    """The characterization cache geometry travels with the plan; replaying
+    without an explicit cache uses it (not the generic CacheConfig())."""
+    app, cache = km_setup
+    path = str(tmp_path / "plan.json")
+    save_plan(path, km_workflow.plan, app_name=app.name, cache=cache)
+    art = load_plan(path)
+    assert art.cache == cache
+    implicit = replay_plan(path, app, n_tests=8, seed=5)
+    explicit = CrashTester(app, km_workflow.plan, cache, seed=5).run_campaign(8)
+    assert [dataclasses.asdict(r) for r in implicit.records] == \
+           [dataclasses.asdict(r) for r in explicit.records]
+    # a plan saved without cache context still replays (generic default)
+    path2 = str(tmp_path / "nocache.json")
+    save_plan(path2, km_workflow.plan, app_name=app.name)
+    assert load_plan(path2).cache is None
+    replay_plan(path2, app, n_tests=2, seed=5)
+
+
+def test_workflow_artifact_is_strict_json_even_with_nan_scores(km_setup, km_workflow, tmp_path):
+    """NaN Spearman scores (constant inconsistency vectors) must serialize
+    as null, not the non-portable NaN token."""
+    from repro.core.selection import ObjectScore
+
+    app, _ = km_setup
+    wf = dataclasses.replace(
+        km_workflow,
+        object_scores=[ObjectScore("ghost", float("nan"), 1.0, False)],
+    )
+    path = str(tmp_path / "wf.json")
+    save_workflow(path, wf)
+
+    def no_constants(s):
+        raise AssertionError(f"non-strict JSON token {s!r} in artifact")
+
+    doc = json.loads(open(path).read(), parse_constant=no_constants)
+    assert doc["payload"]["object_scores"][0]["rs"] is None
+    art = load_workflow(path)
+    assert art.object_scores[0]["rs"] is None
+
+
+def test_artifacts_survive_nonfinite_tau(km_setup, km_workflow, tmp_path):
+    """tau_threshold returns inf when EasyCrash can never win (documented);
+    a finished workflow must still serialize — non-finite floats map to
+    null, and the strict encoder never raises after the campaigns ran."""
+    import math
+
+    app, _ = km_setup
+    wf = dataclasses.replace(km_workflow, tau=float("inf"))
+    path = str(tmp_path / "wf.json")
+    save_workflow(path, wf)
+    art = load_workflow(path)
+    assert math.isnan(art.tau)  # null round-trips as nan
+    plan_path = str(tmp_path / "plan.json")
+    save_plan(plan_path, wf.plan, app_name=app.name,
+              meta={"tau": float("inf"), "note": "kept"})
+    loaded = load_plan(plan_path)
+    assert loaded.meta == {"tau": None, "note": "kept"}
+
+
+def test_replay_refuses_foreign_app(km_setup, km_workflow, tmp_path):
+    app, cache = km_setup
+    path = str(tmp_path / "plan.json")
+    save_plan(path, km_workflow.plan, app_name=app.name)
+    other = ci_app("mg")
+    with pytest.raises(ArtifactError, match="cannot replay"):
+        replay_plan(path, other, cache=cache, n_tests=4)

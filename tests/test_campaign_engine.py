@@ -166,6 +166,127 @@ def test_store_rejects_foreign_campaign(mg_setup, tmp_path):
         ).run_campaign(6, store_path=path)
 
 
+def test_store_raises_on_midfile_corruption(mg_setup, tmp_path):
+    """The resume-safety argument tolerates exactly one torn *trailing* line
+    (the crash signature of an fsynced append).  An undecodable line in the
+    middle of the file is corruption: silently skipping it would silently
+    drop a completed shard from the resumed campaign."""
+    app, cache = mg_setup
+    path = str(tmp_path / "campaign.jsonl")
+    CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+        12, store_path=path
+    )
+    lines = open(path).read().splitlines()
+    assert len(lines) >= 4
+    lines[2] = lines[2][: len(lines[2]) // 2]  # torn line with data after it
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with pytest.raises(CampaignStoreError, match="mid-file corruption"):
+        CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+            12, store_path=path
+        )
+    with pytest.raises(CampaignStoreError, match="mid-file corruption"):
+        CampaignStore(path).completed_shards()
+
+
+def test_store_tolerates_torn_trailing_line_without_newline(mg_setup, tmp_path):
+    """The one corruption a crash *can* produce — a torn final append with
+    no terminating newline — still resumes (that shard just re-executes)."""
+    import dataclasses as dc
+
+    app, cache = mg_setup
+    path = str(tmp_path / "campaign.jsonl")
+    full = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+        12, store_path=path
+    )
+    lines = open(path).read().splitlines()
+    with open(path, "w") as f:
+        f.write("\n".join(lines[:-1]) + "\n" + lines[-1][: len(lines[-1]) // 2])
+    resumed = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+        12, store_path=path
+    )
+    assert [dc.asdict(r) for r in resumed.records] == \
+           [dc.asdict(r) for r in full.records]
+
+
+def test_store_rejects_non_object_and_binary_corruption(mg_setup, tmp_path):
+    """Corruption beyond torn tails surfaces as CampaignStoreError, never a
+    raw AttributeError/UnicodeDecodeError: decodable non-dict lines are
+    foreign content, invalid UTF-8 mid-file is corruption — while a torn
+    multi-byte character at EOF is just a torn tail and must resume."""
+    import dataclasses as dc
+
+    app, cache = mg_setup
+    path = str(tmp_path / "campaign.jsonl")
+    full = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+        8, store_path=path
+    )
+    lines = open(path).read().splitlines()
+
+    # decodable non-dict line
+    with open(path, "w") as f:
+        f.write("\n".join([lines[0], "42"] + lines[1:]) + "\n")
+    with pytest.raises(CampaignStoreError, match="not a JSON object"):
+        CampaignStore(path).completed_shards()
+
+    # invalid UTF-8 mid-file
+    with open(path, "wb") as f:
+        f.write(lines[0].encode() + b"\n\xff\xfe{broken\n"
+                + "\n".join(lines[1:]).encode() + b"\n")
+    with pytest.raises(CampaignStoreError, match="mid-file corruption"):
+        CampaignStore(path).completed_shards()
+
+    # torn multi-byte character at EOF: tolerated, resumes to the full result
+    with open(path, "wb") as f:
+        f.write("\n".join(lines).encode() + b"\n"
+                + b'{"type": "shard", "torn": "\xe2\x82')  # cut mid-char
+    resumed = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+        8, store_path=path
+    )
+    assert [dc.asdict(r) for r in resumed.records] == \
+           [dc.asdict(r) for r in full.records]
+
+
+def test_store_survives_newline_only_tear(mg_setup, tmp_path):
+    """A crash can land every byte of an append except the final newline.
+    The line is then complete, and the reader accepts it — the next append
+    must *terminate* it, not truncate it, or a resume would silently delete
+    data it already counted (worst case: the header, bricking the store)."""
+    import dataclasses as dc
+
+    app, cache = mg_setup
+    path = str(tmp_path / "campaign.jsonl")
+    full = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+        8, store_path=path
+    )
+    lines = open(path).read().splitlines()
+
+    # header-only store whose newline was torn off: two back-to-back resumes
+    # must both work (run 1 appends shards after the repaired header; run 2
+    # must still find the header first)
+    with open(path, "w") as f:
+        f.write(lines[0])  # no trailing newline
+    r1 = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+        8, store_path=path
+    )
+    r2 = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+        8, store_path=path
+    )
+    assert [dc.asdict(r) for r in r1.records] == [dc.asdict(r) for r in full.records]
+    assert [dc.asdict(r) for r in r2.records] == [dc.asdict(r) for r in full.records]
+
+    # same tear on a fully-written store: the final (complete) shard line
+    # must survive the repair, not be dropped and re-executed
+    with open(path, "w") as f:
+        f.write("\n".join(lines))  # all lines, trailing newline torn off
+    shards_before = CampaignStore(path).completed_shards()
+    again = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
+        8, store_path=path
+    )
+    assert [dc.asdict(r) for r in again.records] == [dc.asdict(r) for r in full.records]
+    assert CampaignStore(path).completed_shards().keys() == shards_before.keys()
+
+
 def test_store_roundtrip_preserves_records(mg_setup, tmp_path):
     app, cache = mg_setup
     path = str(tmp_path / "campaign.jsonl")

@@ -1,0 +1,251 @@
+"""Workflow orchestrator: scheduler parity, kill/resume, store hygiene.
+
+The contract mirrors the campaign engine's (tests/test_campaign_engine.py,
+tests/test_faults.py) one level up: the orchestrated workflow must be
+bit-for-bit the historical serial workflow at every worker count, and a
+killed workflow must resume from its WorkflowStore executing only the
+shards that never landed.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import CrashTester, PersistPlan
+from repro.core.campaign_store import CampaignStoreError, WorkflowStore
+from repro.core.cache_sim import CacheConfig
+from repro.core.faults import TornWrite
+from repro.core.workflow import run_workflow
+
+from repro.hpc.suite import ci_app, default_cache
+
+
+@pytest.fixture(scope="module")
+def km_setup():
+    app = ci_app("kmeans")
+    return app, default_cache(app)
+
+
+def _wf_dicts(wf):
+    """Every campaign's records + the selection products, for bitwise diff."""
+    return {
+        "baseline": [dataclasses.asdict(r) for r in wf.baseline_campaign.records],
+        "best": [dataclasses.asdict(r) for r in wf.best_campaign.records],
+        "critical": wf.critical,
+        "plan": (wf.plan.objects, tuple(sorted(wf.plan.region_freq.items()))),
+        "summary": wf.summary(),
+        "stats": (wf.baseline_campaign.window_write_stats,
+                  wf.best_campaign.window_write_stats),
+    }
+
+
+# ----------------------------------------------------------------- scheduling
+def test_shared_scheduler_matches_serial(km_setup):
+    """The orchestrated workflow is bit-for-bit the PR-2 serial engine."""
+    app, cache = km_setup
+    kw = dict(n_tests=16, cache=cache, seed=0, region_measure="isolated")
+    serial = run_workflow(app, scheduler="serial", **kw)
+    shared = run_workflow(app, scheduler="shared", **kw)
+    assert _wf_dicts(serial) == _wf_dicts(shared)
+
+
+def test_shared_scheduler_matches_serial_paper_mode(km_setup):
+    app, cache = km_setup
+    kw = dict(n_tests=16, cache=cache, seed=0, region_measure="paper")
+    serial = run_workflow(app, scheduler="serial", **kw)
+    shared = run_workflow(app, scheduler="shared", **kw)
+    assert _wf_dicts(serial) == _wf_dicts(shared)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_workers", [2, 4])
+def test_worker_parity(km_setup, n_workers):
+    """Bit-for-bit identical workflows for n_workers in {1, 2, 4}."""
+    app, cache = km_setup
+    kw = dict(n_tests=10, cache=cache, seed=0, region_measure="isolated")
+    one = run_workflow(app, scheduler="shared", n_workers=1, **kw)
+    par = run_workflow(app, scheduler="shared", n_workers=n_workers, **kw)
+    assert _wf_dicts(one) == _wf_dicts(par), n_workers
+
+
+def test_bad_arguments(km_setup):
+    app, cache = km_setup
+    with pytest.raises(ValueError, match="scheduler"):
+        run_workflow(app, n_tests=8, cache=cache, scheduler="quantum")
+    with pytest.raises(ValueError, match="shared"):
+        run_workflow(app, n_tests=8, cache=cache, scheduler="serial",
+                     store_path="/tmp/nope.jsonl")
+    with pytest.raises(ValueError, match="shared"):
+        run_workflow(app, n_tests=8, cache=cache, scheduler="serial",
+                     shard_callback=lambda k, s: None)
+
+
+# -------------------------------------------------------------------- resume
+def test_workflow_resume_after_kill(km_setup, tmp_path):
+    """A workflow killed mid-run (torn trailing line in the WorkflowStore)
+    resumes to the identical result, executing only the missing shards."""
+    app, cache = km_setup
+    path = str(tmp_path / "wf.jsonl")
+    kw = dict(n_tests=12, cache=cache, seed=0, region_measure="isolated")
+    full = run_workflow(app, store_path=path, **kw)
+
+    lines = open(path).read().splitlines()
+    n_shard_lines = sum(1 for ln in lines if '"type": "shard"' in ln)
+    assert n_shard_lines >= 4
+    # kill after ~half the shards landed, tearing the next line mid-append
+    keep = len(lines) // 2
+    with open(path, "w") as f:
+        f.write("\n".join(lines[:keep]) + "\n" + lines[keep][: len(lines[keep]) // 2])
+
+    executed = []
+    orig = CrashTester.run_window_tests
+
+    def counting(self, crash_iter, tests):
+        executed.append(crash_iter)
+        return orig(self, crash_iter, tests)
+
+    CrashTester.run_window_tests = counting
+    try:
+        resumed = run_workflow(app, store_path=path, **kw)
+    finally:
+        CrashTester.run_window_tests = orig
+
+    assert _wf_dicts(resumed) == _wf_dicts(full)
+    kept_shards = sum(1 for ln in lines[:keep] if '"type": "shard"' in ln)
+    assert len(executed) == n_shard_lines - kept_shards  # only missing shards
+
+    # a completed store resumes with zero shards executed
+    executed.clear()
+    CrashTester.run_window_tests = counting
+    try:
+        again = run_workflow(app, store_path=path, **kw)
+    finally:
+        CrashTester.run_window_tests = orig
+    assert _wf_dicts(again) == _wf_dicts(full)
+    assert executed == []
+
+
+def test_shard_callback_fires_after_durable_append(km_setup, tmp_path):
+    app, cache = km_setup
+    path = str(tmp_path / "wf.jsonl")
+    seen = []
+
+    def cb(key, shard_id):
+        # at callback time the shard must already be re-loadable
+        assert shard_id in WorkflowStore(path).completed_shards(key)
+        seen.append((key, shard_id))
+
+    run_workflow(app, n_tests=8, cache=cache, seed=0, store_path=path,
+                 region_measure="paper", shard_callback=cb)
+    assert seen
+    assert {k for k, _ in seen} == {"baseline", "best"}
+
+
+def test_workflow_store_refuses_different_workflow(km_setup, tmp_path):
+    app, cache = km_setup
+    path = str(tmp_path / "wf.jsonl")
+    kw = dict(n_tests=8, cache=cache, region_measure="paper")
+    run_workflow(app, seed=0, store_path=path, **kw)
+    with pytest.raises(CampaignStoreError, match="different workflow"):
+        run_workflow(app, seed=1, store_path=path, **kw)
+    with pytest.raises(CampaignStoreError, match="different workflow"):
+        run_workflow(app, seed=0, store_path=path, fault_model=TornWrite(), **kw)
+
+
+def test_workflow_store_refuses_campaign_fingerprint_clash(km_setup, tmp_path):
+    """If a stored member campaign no longer matches what the resumed
+    workflow would run (e.g. the critical-object set changed), the store is
+    refused rather than silently mixing incompatible shard results."""
+    app, cache = km_setup
+    path = str(tmp_path / "wf.jsonl")
+    kw = dict(n_tests=8, cache=cache, seed=0, region_measure="paper")
+    run_workflow(app, store_path=path, **kw)
+    lines = open(path).read().splitlines()
+    doctored = []
+    for ln in lines:
+        d = json.loads(ln)
+        if d.get("type") == "campaign" and d["key"] == "best":
+            d["fingerprint"]["plan_objects"] = ["not-the-real-selection"]
+        doctored.append(json.dumps(d))
+    with open(path, "w") as f:
+        f.write("\n".join(doctored) + "\n")
+    with pytest.raises(CampaignStoreError, match="campaign 'best'"):
+        run_workflow(app, store_path=path, **kw)
+
+
+# ------------------------------------------------------------- store hygiene
+def test_store_raises_on_midfile_corruption(km_setup, tmp_path):
+    """Only a torn *trailing* line is a crash signature; an undecodable line
+    with data after it is corruption and must raise, not drop a shard."""
+    app, cache = km_setup
+    path = str(tmp_path / "wf.jsonl")
+    kw = dict(n_tests=10, cache=cache, seed=0, region_measure="paper")
+    run_workflow(app, store_path=path, **kw)
+    lines = open(path).read().splitlines()
+    assert len(lines) >= 4
+    lines[2] = lines[2][: len(lines[2]) // 2]  # mid-file torn line
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    with pytest.raises(CampaignStoreError, match="mid-file corruption"):
+        run_workflow(app, store_path=path, **kw)
+
+
+def test_frozen_configs():
+    """CacheConfig (a shared default parameter value) and the engine's value
+    dataclasses are immutable — a campaign cannot mutate another's config."""
+    import dataclasses as dc
+
+    from repro.core import CrashRecord, WorkflowResult  # noqa: F401
+    from repro.core.selection import ObjectScore, RegionChoice, RegionSelection
+
+    cfg = CacheConfig()
+    with pytest.raises(dc.FrozenInstanceError):
+        cfg.capacity_blocks = 1
+    rec = CrashRecord(0, 0, 0.0, {}, "S1", 0, 0.0)
+    with pytest.raises(dc.FrozenInstanceError):
+        rec.outcome = "S4"
+    score = ObjectScore("u", -0.5, 0.001, True)
+    with pytest.raises(dc.FrozenInstanceError):
+        score.critical = False
+    sel = RegionSelection([RegionChoice(0, 1, 0.1, 0.01)], 0.9, 0.01, True)
+    with pytest.raises(dc.FrozenInstanceError):
+        sel.meets_tau = False
+
+
+def test_orchestrator_refuses_rebound_campaign_key(km_setup):
+    """A campaign key names one identity per orchestrator: rebinding it to a
+    different plan/seed must raise, not silently reuse the cached tester."""
+    from repro.core.workflow import CampaignSpec, WorkflowOrchestrator
+
+    app, cache = km_setup
+    orch = WorkflowOrchestrator(app, cache, fault=None)
+    try:
+        orch.run([CampaignSpec("probe", PersistPlan.none(), 0, 4)])
+        with pytest.raises(ValueError, match="already bound"):
+            orch.run([CampaignSpec("probe", PersistPlan.none(), 1, 4)])
+        with pytest.raises(ValueError, match="already bound"):
+            orch.run([CampaignSpec(
+                "probe", PersistPlan.at_loop_end(("centroids",), app), 0, 4
+            )])
+        # the same identity is fine (results come from the cached tester)
+        orch.run([CampaignSpec("probe", PersistPlan.none(), 0, 4)])
+    finally:
+        orch.close()
+
+
+def test_workflow_matches_pre_orchestrator_reference(km_setup):
+    """Pin the default run_workflow output against an independently computed
+    serial reference (campaigns run directly through CrashTester), proving
+    the orchestrator preserved the PR-2 numbers."""
+    app, cache = km_setup
+    wf = run_workflow(app, n_tests=14, cache=cache, seed=3,
+                      region_measure="paper")
+    base = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(14)
+    assert [dataclasses.asdict(r) for r in wf.baseline_campaign.records] == \
+           [dataclasses.asdict(r) for r in base.records]
+    best_plan = PersistPlan.best(wf.critical, app)
+    best = CrashTester(app, best_plan, cache, seed=4).run_campaign(14)
+    assert [dataclasses.asdict(r) for r in wf.best_campaign.records] == \
+           [dataclasses.asdict(r) for r in best.records]
+    assert np.isfinite(wf.tau)
