@@ -1,0 +1,259 @@
+"""Paper §7 played end-to-end: system efficiency under failure traces,
+driven by campaign-*measured* recompute profiles.
+
+Where ``bench_efficiency`` evaluates the closed-form model at an assumed
+recomputability, this bench runs the pipeline the paper actually argues for:
+
+  crash campaign  ->  RecomputeProfile (S1–S4 rates + recompute-cost
+  histogram)  ->  discrete-event simulation of the four policies
+  (none / checkpoint-only / EasyCrash-only / hybrid)  ->  efficiency curves
+  vs checkpoint cost (Fig 10 shape) and vs node count (Fig 11 shape),
+  with the analytic closed forms printed alongside as a cross-check.
+
+``T_chk`` itself is measured, not assumed: the app state's checkpoint write
+is timed through :func:`repro.checkpoint.measure_checkpoint_cost` and
+extrapolated to a deployment-scale checkpoint at the measured throughput
+(the ``measured-t_chk`` rows).
+
+CLI:
+  python -m benchmarks.bench_sysim            # fast curves (CI-sized)
+  python -m benchmarks.bench_sysim --full     # paper-sized campaigns
+  python -m benchmarks.bench_sysim --smoke    # tiny trace, all 4 policies
+  python -m benchmarks.bench_sysim --frontier # interval-sweep frontier JSON
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Tuple
+
+from .common import RESULTS_DIR, campaign_size, campaign_workers, emit
+
+FRONTIER_PATH = os.path.join(RESULTS_DIR, "sysim_frontier.json")
+
+#: apps whose campaigns feed the curves (spectrum: grid smoother + graph)
+FAST_APPS = ("sor", "pagerank")
+SEED = 2024
+BASE_MTBF = 12 * 3600.0
+BASE_NODES = 100_000
+#: the write the local tier's bandwidth is measured on (large enough that
+#: per-file fsync overhead stops dominating, small enough for CI)
+MEASURE_BYTES = 64 << 20
+#: deployment-scale per-node checkpoint share the measured bandwidth is
+#: extrapolated to (the paper's hundreds-of-seconds T_chk class)
+TARGET_CHECKPOINT_BYTES = 64 << 30
+
+
+#: one campaign per (app, fast) per process: ``benchmarks.run`` executes both
+#: ``run`` and ``frontier``, which would otherwise re-measure identical
+#: profiles — the most expensive step of the bench
+_PROFILE_CACHE: Dict[Tuple[str, bool, int | None], tuple] = {}
+
+
+def measured_profile(name: str, fast: bool = True, n_tests: int | None = None):
+    """Run a crash campaign for ``name`` and distill its RecomputeProfile.
+
+    The plan flushes every candidate at main-loop end (paper Fig 2a's
+    canonical placement) — a cheap, representative EasyCrash deployment;
+    ``--full`` replaces it with the workflow's knapsack plan.
+    """
+    from repro.core import CrashTester, PersistPlan, RecomputeProfile
+    from repro.core.workflow import run_workflow
+    from repro.hpc.suite import bench_app, ci_app, default_cache
+
+    key = (name, fast, n_tests)
+    if key in _PROFILE_CACHE:
+        return _PROFILE_CACHE[key]
+    app = ci_app(name) if fast else bench_app(name)
+    cache = default_cache(app)
+    if fast:
+        plan = PersistPlan.at_loop_end(app.candidates, app)
+    else:
+        wf = run_workflow(app, n_tests=campaign_size(fast), cache=cache,
+                          seed=SEED, region_measure="paper",
+                          n_workers=campaign_workers())
+        plan = wf.plan
+    camp = CrashTester(app, plan, cache, seed=SEED).run_campaign(
+        n_tests or campaign_size(fast), n_workers=campaign_workers()
+    )
+    _PROFILE_CACHE[key] = (app, RecomputeProfile.from_campaign(camp))
+    return _PROFILE_CACHE[key]
+
+
+def measured_cfg():
+    """A :class:`SystemConfig` whose ``T_chk`` is *measured*: this machine's
+    local-tier write bandwidth on a 64 MiB shard, extrapolated to a 64 GiB
+    per-node checkpoint share."""
+    import numpy as np
+
+    from repro.checkpoint import measured_system_config
+
+    tree = {"shard": np.zeros(MEASURE_BYTES // 4, np.float32)}
+    return measured_system_config(tree, mtbf=BASE_MTBF,
+                                  target_bytes=TARGET_CHECKPOINT_BYTES)
+
+
+def _policy_row(system, trace, profile, n_failures: int, t_s: float) -> Dict[str, float]:
+    from repro.core import simulate_policy
+
+    out = {}
+    for policy in ("none", "checkpoint", "easycrash", "hybrid"):
+        r = simulate_policy(policy, system, trace, profile,
+                            n_failures=n_failures, t_s=t_s, seed=SEED)
+        out[f"eff_{policy}"] = round(r.efficiency, 4)
+    out["hybrid_gain_pct"] = round(
+        100 * (out["eff_hybrid"] - out["eff_checkpoint"]), 2
+    )
+    return out
+
+
+def run(fast: bool = True):
+    """Efficiency-vs-T_chk and efficiency-vs-node-count curves."""
+    from repro.core import (
+        PoissonTrace,
+        SystemConfig,
+        efficiency_with,
+        efficiency_without,
+        scaled_trace,
+    )
+    from repro.hpc.suite import FAULT_SWEEP_APPS
+
+    apps = FAST_APPS if fast else FAULT_SWEEP_APPS
+    n_failures = 3_000 if fast else 20_000
+    t_s = 0.015
+    meas_cfg = measured_cfg()  # one measurement: T_chk is a machine property
+    print(f"[measured] local-tier write => T_chk={meas_cfg.t_chk:.0f}s for a "
+          f"{TARGET_CHECKPOINT_BYTES >> 30} GiB per-node share")
+    rows: List[Dict[str, object]] = []
+    for name in apps:
+        app, prof = measured_profile(name, fast)
+        meta = {
+            "app": name,
+            "success_rate": round(prof.success_rate, 4),
+            "recomputability": round(prof.recomputability, 4),
+        }
+        # Fig 10 shape: vary checkpoint cost at fixed machine scale
+        for t_chk in (32.0, 320.0, 3200.0):
+            cfg = SystemConfig(mtbf=BASE_MTBF, t_chk=t_chk)
+            trace = PoissonTrace(cfg.mtbf)
+            row = dict(meta, figure="eff-vs-tchk", config=f"t_chk={int(t_chk)}s")
+            row.update(_policy_row(cfg, trace, prof, n_failures, t_s))
+            row["eff_cr_analytic"] = round(efficiency_without(cfg).efficiency, 4)
+            row["eff_ec_analytic"] = round(
+                efficiency_with(cfg, prof.recomputability, t_s=t_s).efficiency, 4
+            )
+            rows.append(row)
+        # Fig 11 shape: vary machine scale at the harshest checkpoint cost
+        for nodes in (100_000, 200_000, 400_000):
+            trace = scaled_trace(PoissonTrace(BASE_MTBF), BASE_NODES, nodes)
+            cfg = SystemConfig(mtbf=trace.mtbf, t_chk=3200.0)
+            row = dict(meta, figure="eff-vs-nodes", config=f"nodes={nodes}")
+            row.update(_policy_row(cfg, trace, prof, n_failures, t_s))
+            row["eff_cr_analytic"] = round(efficiency_without(cfg).efficiency, 4)
+            row["eff_ec_analytic"] = round(
+                efficiency_with(cfg, prof.recomputability, t_s=t_s).efficiency, 4
+            )
+            rows.append(row)
+        # measured T_chk: this machine's write bandwidth, at deployment scale
+        trace = PoissonTrace(meas_cfg.mtbf)
+        row = dict(meta, figure="measured-tchk",
+                   config=f"t_chk={meas_cfg.t_chk:.0f}s(measured)")
+        row.update(_policy_row(meas_cfg, trace, prof, n_failures, t_s))
+        row["eff_cr_analytic"] = round(efficiency_without(meas_cfg).efficiency, 4)
+        row["eff_ec_analytic"] = round(
+            efficiency_with(meas_cfg, prof.recomputability, t_s=t_s).efficiency, 4
+        )
+        rows.append(row)
+
+    gains = [r["hybrid_gain_pct"] for r in rows if r["figure"] == "eff-vs-tchk"]
+    print(f"[headline] hybrid-vs-checkpoint gains (eff-vs-tchk rows): "
+          f"{min(gains):.1f}..{max(gains):.1f} pts "
+          f"(paper: up to 24, 15 on average)")
+    emit(rows, "sysim")
+    return rows
+
+
+def frontier(fast: bool = True):
+    """Interval-sweep efficiency frontier per app, as one JSON artifact
+    (uploaded by the scheduled golden-campaigns CI job next to the
+    robustness matrix)."""
+    from repro.core import PoissonTrace, SystemConfig, efficiency_frontier
+
+    apps = FAST_APPS
+    n_failures = 2_000 if fast else 10_000
+    cfg = SystemConfig(mtbf=BASE_MTBF, t_chk=320.0)
+    doc: Dict[str, object] = {"apps": {}}
+    for name in apps:
+        _, prof = measured_profile(name, fast=fast)
+        doc["apps"][name] = efficiency_frontier(
+            cfg, PoissonTrace(cfg.mtbf), prof,
+            n_failures=n_failures, t_s=0.015, seed=SEED,
+        )
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(FRONTIER_PATH, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    for name, d in doc["apps"].items():
+        pol = d["policies"]
+        print(f"[frontier] {name}: "
+              f"ckpt best {pol['checkpoint']['best']['efficiency']:.4f} "
+              f"@ {pol['checkpoint']['best']['interval']:.0f}s, "
+              f"hybrid best {pol['hybrid']['best']['efficiency']:.4f} "
+              f"@ {pol['hybrid']['best']['interval']:.0f}s")
+    print(f"[frontier] -> {FRONTIER_PATH}")
+    return doc
+
+
+def smoke() -> None:
+    """Tiny-trace smoke for the CI fast gate: all four policies on both
+    trace kinds, seeded, with sanity asserted (no campaign needed)."""
+    from repro.core import (
+        POLICIES,
+        PoissonTrace,
+        RecomputeProfile,
+        SystemConfig,
+        WeibullTrace,
+        simulate_policy,
+    )
+    from repro.core.sysim import MONTH
+
+    cfg = SystemConfig(mtbf=6 * 3600.0, t_chk=300.0)
+    prof = RecomputeProfile.from_fractions(
+        "smoke", {"S1": 0.7, "S2": 0.2, "S3": 0.05, "S4": 0.05},
+        extra_iters_hist=((2, 3), (8, 1)),
+    )
+    for trace in (PoissonTrace(cfg.mtbf), WeibullTrace(cfg.mtbf, shape=0.7)):
+        for policy in POLICIES:
+            r = simulate_policy(policy, cfg, trace, prof, n_failures=200,
+                                horizon=MONTH * 3, t_s=0.02, seed=1)
+            again = simulate_policy(policy, cfg, trace, prof, n_failures=200,
+                                    horizon=MONTH * 3, t_s=0.02, seed=1)
+            assert 0.0 <= r.efficiency <= 1.0, (policy, r)
+            assert r == again, f"{policy}: same seed must reproduce bit-for-bit"
+            print(f"[smoke] {trace.spec()['trace']:8s} {policy:10s} "
+                  f"eff={r.efficiency:.4f} failures={r.n_failures} "
+                  f"ckpts={r.n_checkpoints} nvm={r.n_nvm_recoveries} "
+                  f"fallbacks={r.n_fallbacks}")
+    print("[smoke] ok")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny synthetic trace, all four policies (CI gate)")
+    ap.add_argument("--frontier", action="store_true",
+                    help=f"write the interval-sweep frontier to {FRONTIER_PATH}")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    if args.frontier:
+        frontier(fast=not args.full)
+        return
+    run(fast=not args.full)
+
+
+if __name__ == "__main__":
+    main()

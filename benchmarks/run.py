@@ -4,7 +4,9 @@
   bench_selection       — Fig 4a/4b + Fig 5
   bench_persist_overhead— Table 4
   bench_nvm_writes      — Fig 9
-  bench_efficiency      — Fig 10 + Fig 11
+  bench_efficiency      — Fig 10 + Fig 11 (closed-form model)
+  bench_sysim           — Fig 10/11 shapes from the failure-trace simulator,
+                          driven by campaign-measured recompute profiles
   bench_kernels         — Pallas kernels vs oracles (us/call CSV)
   bench_workflow        — shared-pool orchestrator vs serial workflow engine
   bench_roofline        — §Roofline table from the dry-run artifacts
@@ -35,6 +37,7 @@ def main() -> None:
         bench_recomputability,
         bench_roofline,
         bench_selection,
+        bench_sysim,
         bench_workflow,
     )
 
@@ -47,6 +50,8 @@ def main() -> None:
         ("persist_overhead", bench_persist_overhead.run),
         ("nvm_writes", bench_nvm_writes.run),
         ("efficiency", bench_efficiency.run),
+        ("sysim", bench_sysim.run),
+        ("sysim_frontier", bench_sysim.frontier),
         ("kernels", bench_kernels.run),
         ("roofline", bench_roofline.run),
     ]

@@ -29,7 +29,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def main() -> None:
-    from repro.core.artifacts import load_workflow, save_plan, save_workflow
+    from repro.core.artifacts import (
+        load_workflow,
+        save_plan,
+        save_profile,
+        save_workflow,
+    )
     from repro.core.campaign_store import WorkflowStore
     from repro.core.faults import FAULT_MODELS, get_fault_model
     from repro.core.workflow import run_workflow
@@ -101,10 +106,15 @@ def main() -> None:
                   meta={"tau": wf.tau, "t_s": wf.t_s,
                         "expected_recomputability":
                             wf.region_selection.expected_recomputability})
+        # the measured S1-S4 rates + recompute-cost histogram, for the
+        # system-efficiency simulator (examples/system_efficiency.py)
+        profile_path = os.path.splitext(args.artifact)[0] + ".profile.json"
+        save_profile(profile_path, wf.recompute_profile(fault=fault),
+                     meta={"campaign": "best", "n_tests": args.tests})
         check = load_workflow(args.artifact)  # verifies the fingerprint
         assert check.plan == wf.plan
         print(f"artifacts: {args.artifact} (fingerprint {fp[:16]}...) "
-              f"+ {plan_path}")
+              f"+ {plan_path} + {profile_path}")
 
 
 if __name__ == "__main__":

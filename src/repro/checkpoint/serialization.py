@@ -4,6 +4,13 @@ Leaves are saved in *logical* (unsharded) layout: every host writes its
 addressable shards into the right slice of a per-leaf file region.  On one
 host this degenerates to plain np.save; the format stays mesh-agnostic so a
 checkpoint taken on any mesh restores onto any other (elastic scaling).
+
+Writes are durable: every leaf file is flushed+fsynced and the manifest —
+which is what marks a checkpoint *complete* — is committed last through the
+:mod:`repro.core.durable` replace path.  A writer killed (or a node losing
+power) mid-checkpoint therefore leaves either a manifest-less partial the
+manager ignores, or a fully-landed checkpoint; never a manifest pointing at
+torn leaf data.
 """
 from __future__ import annotations
 
@@ -13,6 +20,8 @@ from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np
+
+from ..core.durable import durable_replace
 
 _SEP = "/"
 
@@ -41,6 +50,14 @@ def unflatten_tree(flat: Dict[str, Any]) -> Any:
     return out
 
 
+def tree_nbytes(tree: Any) -> int:
+    """Total serialized payload size of a pytree's leaves, in bytes."""
+    return sum(
+        np.asarray(jax.device_get(leaf)).nbytes
+        for leaf in flatten_tree(tree).values()
+    )
+
+
 def save_pytree(tree: Any, directory: str) -> None:
     os.makedirs(directory, exist_ok=True)
     flat = flatten_tree(tree)
@@ -48,12 +65,17 @@ def save_pytree(tree: Any, directory: str) -> None:
     for name, leaf in flat.items():
         arr = np.asarray(jax.device_get(leaf))
         safe = name.replace(_SEP, "__")
-        np.save(os.path.join(directory, safe + ".npy"), arr)
+        with open(os.path.join(directory, safe + ".npy"), "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
         manifest[name] = {"file": safe + ".npy", "shape": list(arr.shape), "dtype": str(arr.dtype)}
     tmp = os.path.join(directory, "manifest.json.tmp")
     with open(tmp, "w") as f:
         json.dump(manifest, f)
-    os.replace(tmp, os.path.join(directory, "manifest.json"))
+        f.flush()
+        os.fsync(f.fileno())
+    durable_replace(tmp, os.path.join(directory, "manifest.json"))
 
 
 def load_pytree(directory: str) -> Any:

@@ -45,20 +45,37 @@ from .faults import (
 from .artifacts import (
     ArtifactError,
     PlanArtifact,
+    ProfileArtifact,
     WorkflowArtifact,
     load_plan,
+    load_profile,
     load_workflow,
+    profile_from_workflow,
     replay_plan,
     save_plan,
+    save_profile,
     save_workflow,
 )
 from .efficiency import (
     SystemConfig,
     efficiency_with,
     efficiency_without,
+    expected_overhead,
     scale_mtbf,
     tau_threshold,
     young_interval,
+)
+from .sysim import (
+    POLICIES,
+    FailureTrace,
+    PoissonTrace,
+    RecomputeProfile,
+    SimResult,
+    WeibullTrace,
+    efficiency_frontier,
+    optimize_interval,
+    scaled_trace,
+    simulate_policy,
 )
 from .manager import EasyCrashManager, FlushPolicy, flatten_state, unflatten_state
 from .regions import IterativeApp, Region, State, VerifyResult
@@ -80,10 +97,15 @@ __all__ = [
     "FAULT_MODELS", "BitFlip", "CorrelatedRegion", "FaultModel", "MultiCrash",
     "PowerFail", "TornWrite", "all_fault_models", "fault_model_from_spec",
     "get_fault_model",
-    "ArtifactError", "PlanArtifact", "WorkflowArtifact", "load_plan",
-    "load_workflow", "replay_plan", "save_plan", "save_workflow",
+    "ArtifactError", "PlanArtifact", "ProfileArtifact", "WorkflowArtifact",
+    "load_plan", "load_profile", "load_workflow", "profile_from_workflow",
+    "replay_plan", "save_plan", "save_profile", "save_workflow",
     "SystemConfig",
-    "efficiency_with", "efficiency_without", "scale_mtbf", "tau_threshold",
+    "efficiency_with", "efficiency_without", "expected_overhead", "scale_mtbf",
+    "tau_threshold",
+    "POLICIES", "FailureTrace", "PoissonTrace", "RecomputeProfile",
+    "SimResult", "WeibullTrace", "efficiency_frontier", "optimize_interval",
+    "scaled_trace", "simulate_policy",
     "young_interval", "EasyCrashManager", "FlushPolicy", "flatten_state",
     "unflatten_state", "IterativeApp", "Region", "State", "VerifyResult",
     "select_objects", "select_regions", "spearman",

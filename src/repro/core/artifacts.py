@@ -37,9 +37,12 @@ from .durable import durable_replace
 from .faults import FaultModel, fault_model_from_spec
 from .regions import IterativeApp
 
+from .sysim import RecomputeProfile
+
 ARTIFACT_VERSION = 1
 PLAN_KIND = "easycrash-persist-plan"
 WORKFLOW_KIND = "easycrash-workflow-result"
+PROFILE_KIND = "easycrash-recompute-profile"
 
 
 class ArtifactError(RuntimeError):
@@ -307,6 +310,100 @@ def load_workflow(path: str) -> WorkflowArtifact:
         fault_spec=dict(payload["fault"]),
         cache=cache_from_payload(payload.get("cache")),
         fingerprint=fp,
+    )
+
+
+# ------------------------------------------------------------- profile codec
+def profile_to_payload(profile: RecomputeProfile) -> Dict[str, object]:
+    return {
+        "app": str(profile.app_name),
+        "fault": dict(profile.fault_spec),
+        "fractions": {
+            c: float(profile.fractions.get(c, 0.0))
+            for c in ("S1", "S2", "S3", "S4")
+        },
+        "extra_iters_hist": [[int(i), int(c)] for i, c in profile.extra_iters_hist],
+        "golden_iters": int(profile.golden_iters),
+        "n_records": int(profile.n_records),
+    }
+
+
+def profile_from_payload(d: Mapping[str, object]) -> RecomputeProfile:
+    return RecomputeProfile(
+        app_name=str(d["app"]),
+        fault_spec=dict(d["fault"]),
+        fractions={k: float(v) for k, v in dict(d["fractions"]).items()},
+        extra_iters_hist=tuple((int(i), int(c)) for i, c in d["extra_iters_hist"]),
+        golden_iters=int(d["golden_iters"]),
+        n_records=int(d["n_records"]),
+    )
+
+
+@dataclass(frozen=True)
+class ProfileArtifact:
+    """A loaded recompute-profile artifact (verified fingerprint)."""
+
+    profile: RecomputeProfile
+    meta: Dict[str, object]
+    fingerprint: str
+
+    @property
+    def app_name(self) -> str:
+        return self.profile.app_name
+
+    @property
+    def fault(self) -> FaultModel:
+        """The fault model the profile's campaign ran under."""
+        return fault_model_from_spec(self.profile.fault_spec)
+
+
+def save_profile(
+    path: str,
+    profile: RecomputeProfile,
+    meta: Optional[Mapping[str, object]] = None,
+) -> str:
+    """Write a recompute-profile artifact; returns its fingerprint.
+
+    This is the contract between the characterization pipeline and the
+    system simulator: per-app, per-fault-model S1–S4 rates plus the measured
+    extra-recompute-iteration histogram, fingerprinted so a hand-edited or
+    truncated profile can never silently steer an efficiency study.
+    """
+    payload: Dict[str, object] = profile_to_payload(profile)
+    payload["meta"] = _sanitize_meta(meta or {})
+    return _write_envelope(path, PROFILE_KIND, payload)
+
+
+def load_profile(path: str) -> ProfileArtifact:
+    payload, fp = _read_envelope(path, PROFILE_KIND)
+    return ProfileArtifact(
+        profile=profile_from_payload(payload),
+        meta=dict(payload.get("meta", {})),
+        fingerprint=fp,
+    )
+
+
+def profile_from_workflow(
+    artifact: "WorkflowArtifact", which: str = "best"
+) -> RecomputeProfile:
+    """A :class:`RecomputeProfile` from a stored workflow summary.
+
+    Workflow artifacts carry per-campaign S1–S4 fractions but not the raw
+    records, so the recompute-cost histogram is empty — the simulator then
+    prices S2 recoveries at the NVM-restore cost alone (optimistic; prefer a
+    profile saved by :func:`save_profile` from a live campaign when one is
+    available).  ``which`` selects the measured campaign: ``"best"``
+    (persist-everywhere, the plan's upper bound) or ``"baseline"``.
+    """
+    if which not in artifact.campaign_fractions:
+        raise ArtifactError(
+            f"workflow artifact has no {which!r} campaign "
+            f"(have {sorted(artifact.campaign_fractions)})"
+        )
+    return RecomputeProfile.from_fractions(
+        artifact.app_name,
+        artifact.campaign_fractions[which],
+        fault_spec=artifact.fault_spec,
     )
 
 

@@ -22,6 +22,16 @@ def young_interval(t_chk: float, mtbf: float) -> float:
     return math.sqrt(2.0 * t_chk * mtbf)
 
 
+def expected_overhead(interval: float, t_chk: float, mtbf: float) -> float:
+    """The first-order overhead rate Young's interval minimizes: checkpoint
+    cost amortized over the interval plus expected rework per crash,
+    ``t_chk/T + T/(2*MTBF)``.  Exactly minimized at :func:`young_interval`;
+    the *full* bookkeeping model (and the discrete-event simulator in
+    :mod:`repro.core.sysim`) have their optimum slightly below it, because
+    Young ignores crashes during checkpoint writes and recovery time."""
+    return t_chk / interval + interval / (2.0 * mtbf)
+
+
 @dataclass(frozen=True)
 class SystemConfig:
     mtbf: float                      # seconds, whole-system MTBF
@@ -49,9 +59,12 @@ class EfficiencyResult:
     breakdown: Dict[str, float]
 
 
-def efficiency_without(cfg: SystemConfig) -> EfficiencyResult:
-    """Eq. 6/7: plain C/R."""
-    T = young_interval(cfg.t_chk, cfg.mtbf)
+def efficiency_without(
+    cfg: SystemConfig, interval: Optional[float] = None
+) -> EfficiencyResult:
+    """Eq. 6/7: plain C/R.  ``interval`` overrides the Young checkpoint
+    interval (interval-sweep experiments); ``None`` is the paper's choice."""
+    T = young_interval(cfg.t_chk, cfg.mtbf) if interval is None else float(interval)
     M = cfg.total_time / cfg.mtbf
     t_vain = 0.5 * T
     recovery = M * (t_vain + cfg.t_r + cfg.t_sync)
@@ -76,6 +89,7 @@ def efficiency_with(
     cfg: SystemConfig,
     recomputability: float,
     t_s: float = 0.03,
+    interval: Optional[float] = None,
 ) -> EfficiencyResult:
     """Eq. 8/9: EasyCrash in front of C/R.
 
@@ -84,10 +98,11 @@ def efficiency_with(
     (checkpoint rollback).  The checkpoint interval stretches via
     MTBF' = MTBF / (1 - R) — only non-recomputable crashes force rollbacks.
     EasyCrash's own flush overhead taxes useful time by (1 - t_s).
+    ``interval`` overrides the stretched Young interval.
     """
     R = min(max(recomputability, 0.0), 0.999999)
     mtbf_ec = cfg.mtbf / (1.0 - R)
-    T = young_interval(cfg.t_chk, mtbf_ec)
+    T = young_interval(cfg.t_chk, mtbf_ec) if interval is None else float(interval)
     M = cfg.total_time / cfg.mtbf
     M_fallback = M * (1.0 - R)
     M_recompute = M * R

@@ -268,6 +268,24 @@ class WorkflowResult:
             "tau": self.tau,
         }
 
+    def recompute_profile(self, which: str = "best", fault: Optional[FaultModel] = None):
+        """The workflow's measured :class:`~repro.core.sysim.RecomputeProfile`
+        — S1–S4 rates plus the extra-recompute-iteration histogram — for the
+        system-efficiency simulator.
+
+        ``which`` picks the measured campaign: ``"best"`` (persist
+        everywhere — the upper bound the knapsack plan approaches) or
+        ``"baseline"`` (no EasyCrash flushes at all).  ``fault`` must name
+        the model the workflow ran under (``run_workflow(fault_model=)``);
+        ``None`` is the default clean power failure.
+        """
+        from .sysim import RecomputeProfile
+
+        campaigns = {"best": self.best_campaign, "baseline": self.baseline_campaign}
+        if which not in campaigns:
+            raise ValueError(f"which={which!r}, expected one of {sorted(campaigns)}")
+        return RecomputeProfile.from_campaign(campaigns[which], fault=fault)
+
 
 def estimate_region_overheads(
     app: IterativeApp,

@@ -1,18 +1,24 @@
-"""Plan/workflow artifacts: round-trip, fingerprint rejection, replay."""
+"""Plan/workflow/profile artifacts: round-trip, fingerprint rejection,
+replay."""
 import dataclasses
 import json
 
 import pytest
 
-from repro.core import CrashTester, PersistPlan
+from repro.core import CrashTester, PersistPlan, RecomputeProfile
 from repro.core.artifacts import (
     ArtifactError,
     load_plan,
+    load_profile,
     load_workflow,
     plan_from_payload,
     plan_to_payload,
+    profile_from_payload,
+    profile_from_workflow,
+    profile_to_payload,
     replay_plan,
     save_plan,
+    save_profile,
     save_workflow,
 )
 from repro.core.faults import PowerFail, TornWrite
@@ -194,6 +200,79 @@ def test_artifacts_survive_nonfinite_tau(km_setup, km_workflow, tmp_path):
               meta={"tau": float("inf"), "note": "kept"})
     loaded = load_plan(plan_path)
     assert loaded.meta == {"tau": None, "note": "kept"}
+
+
+def _demo_profile():
+    return RecomputeProfile.from_fractions(
+        "kmeans", {"S1": 0.6, "S2": 0.25, "S3": 0.05, "S4": 0.1},
+        fault_spec=PowerFail().spec(),
+        extra_iters_hist=((1, 3), (4, 2)), golden_iters=8, n_records=20,
+    )
+
+
+def test_profile_payload_round_trip():
+    prof = _demo_profile()
+    assert profile_from_payload(profile_to_payload(prof)) == prof
+    assert profile_from_payload(
+        json.loads(json.dumps(profile_to_payload(prof)))
+    ) == prof
+
+
+def test_profile_artifact_round_trip(tmp_path):
+    prof = _demo_profile()
+    path = str(tmp_path / "profile.json")
+    fp = save_profile(path, prof, meta={"campaign": "best", "n_tests": 20})
+    art = load_profile(path)
+    assert art.profile == prof
+    assert art.app_name == "kmeans"
+    assert art.meta == {"campaign": "best", "n_tests": 20}
+    assert art.fingerprint == fp
+    assert art.fault == PowerFail()
+    # deterministic fingerprint for the identical payload
+    assert save_profile(str(tmp_path / "p2.json"), prof,
+                        meta={"campaign": "best", "n_tests": 20}) == fp
+
+
+def test_profile_artifact_rejects_tampering(tmp_path):
+    path = str(tmp_path / "profile.json")
+    save_profile(path, _demo_profile())
+    doc = json.load(open(path))
+    doc["payload"]["fractions"]["S1"] = 0.99  # the hand-tuned success rate
+    json.dump(doc, open(path, "w"))
+    with pytest.raises(ArtifactError, match="fingerprint mismatch"):
+        load_profile(path)
+    # a plan artifact is not a profile artifact
+    plan_path = str(tmp_path / "plan.json")
+    save_plan(plan_path, PersistPlan.none(), app_name="kmeans")
+    with pytest.raises(ArtifactError, match="not a"):
+        load_profile(plan_path)
+
+
+def test_workflow_recompute_profile_and_from_workflow(km_setup, km_workflow, tmp_path):
+    """The workflow's measured profile round-trips two ways: directly from
+    the campaigns (with the recompute-cost histogram) and from a stored
+    workflow artifact (rates only, histogram empty)."""
+    wf = km_workflow
+    prof = wf.recompute_profile()
+    assert prof.app_name == wf.app_name
+    assert prof.fractions == wf.best_campaign.class_fractions()
+    assert prof.n_records == wf.best_campaign.n
+    s2 = [r.extra_iters for r in wf.best_campaign.records if r.outcome == "S2"]
+    assert sum(c for _, c in prof.extra_iters_hist) == len(s2)
+    base = wf.recompute_profile(which="baseline")
+    assert base.fractions == wf.baseline_campaign.class_fractions()
+    with pytest.raises(ValueError, match="which"):
+        wf.recompute_profile(which="plan")
+
+    path = str(tmp_path / "wf.json")
+    save_workflow(path, wf, fault=PowerFail())
+    art = load_workflow(path)
+    from_art = profile_from_workflow(art)
+    assert from_art.fractions == pytest.approx(prof.fractions)
+    assert from_art.extra_iters_hist == ()
+    assert from_art.fault_spec == dict(PowerFail().spec())
+    with pytest.raises(ArtifactError, match="no 'plan' campaign"):
+        profile_from_workflow(art, which="plan")
 
 
 def test_replay_refuses_foreign_app(km_setup, km_workflow, tmp_path):

@@ -1,12 +1,25 @@
-"""Checkpoint manager: atomic commit, retention, tiers, elastic reshard."""
+"""Checkpoint manager: atomic commit, retention, tiers, elastic reshard,
+SIGKILL-mid-write durability, measured write costs."""
 import os
+import signal
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointConfig, CheckpointManager, load_pytree, save_pytree
+from repro.checkpoint import (
+    CheckpointConfig,
+    CheckpointManager,
+    load_pytree,
+    measure_checkpoint_cost,
+    measured_system_config,
+    save_pytree,
+    system_config_from_measurement,
+    tree_nbytes,
+)
 
 
 def _tree(step):
@@ -56,6 +69,94 @@ def test_remote_tier_drain_and_fallback(tmp_path):
     mgr2 = CheckpointManager(cfg)
     step, tree = mgr2.restore()
     assert step == 5 and np.all(tree["params"]["w"] == 5.0)
+
+
+def test_sigkill_mid_write_restores_last_complete_checkpoint(tmp_path):
+    """Kill -9 a writer mid-checkpoint: the manager must come back with the
+    newest *complete* checkpoint — internally consistent, every leaf from
+    the same step — because commits go through the ``core/durable.py``
+    replace path (leaf fsync, manifest-last, atomic rename).  A torn
+    in-flight step directory must never be listed or restored."""
+    local = str(tmp_path / "l")
+    code = f"""
+import os, sys
+sys.path.insert(0, {os.path.join(os.path.dirname(__file__), '..', 'src')!r})
+import numpy as np
+from repro.checkpoint import CheckpointConfig, CheckpointManager
+
+mgr = CheckpointManager(CheckpointConfig(local_dir={local!r}, keep=3))
+for step in range(1, 200):
+    tree = {{
+        "params": {{"w": np.full((1 << 20,), float(step), np.float32)}},
+        "opt": {{"mu": np.full((1 << 20,), float(step), np.float32)}},
+        "step": np.asarray(step),
+    }}
+    mgr.save(step, tree)
+    print(f"SAVED {{step}}", flush=True)
+"""
+    proc = subprocess.Popen([sys.executable, "-c", code],
+                            stdout=subprocess.PIPE, text=True)
+    try:
+        # wait for >= 2 complete checkpoints, then kill while later saves
+        # (4 MiB per leaf) are in flight
+        saved = 0
+        for line in proc.stdout:
+            if line.startswith("SAVED"):
+                saved = int(line.split()[1])
+            if saved >= 2:
+                break
+        assert saved >= 2, "writer died before producing two checkpoints"
+        os.kill(proc.pid, signal.SIGKILL)
+    finally:
+        proc.stdout.close()
+        proc.wait()
+    assert proc.returncode == -signal.SIGKILL
+
+    mgr2 = CheckpointManager(CheckpointConfig(local_dir=local))
+    restored = mgr2.restore()
+    assert restored is not None, "no complete checkpoint survived the kill"
+    step, tree = restored
+    assert step >= 2
+    # internal consistency: every leaf belongs to the restored step
+    assert np.all(tree["params"]["w"] == float(step))
+    assert np.all(tree["opt"]["mu"] == float(step))
+    assert int(tree["step"]) == step
+    # only complete checkpoints are listed; torn tmp dirs are invisible
+    for s in mgr2.list_steps(local):
+        assert os.path.exists(os.path.join(local, f"step_{s:010d}", "manifest.json"))
+    # and the manager keeps working over the debris of the killed writer
+    mgr2.save(step + 1, _tree(step + 1))
+    s2, t2 = mgr2.restore()
+    assert s2 == step + 1 and np.all(t2["params"]["w"] == float(step + 1))
+
+
+def test_measured_checkpoint_cost_and_system_config(tmp_path):
+    """The manager is the measurement instrument: save() times its local
+    writes, and the measured (seconds, bytes) pair turns into a SystemConfig
+    with a real — optionally extrapolated — T_chk."""
+    tree = _tree(3)
+    mgr = CheckpointManager(CheckpointConfig(local_dir=str(tmp_path / "l")))
+    assert mgr.mean_save_seconds() == 0.0
+    mgr.save(1, tree)
+    mgr.save(2, tree)
+    assert len(mgr.save_seconds) == 2
+    assert mgr.mean_save_seconds() > 0.0
+
+    secs, nbytes = measure_checkpoint_cost(tree, repeats=2)
+    assert secs > 0.0
+    assert nbytes == tree_nbytes(tree) > 0
+
+    # pure extrapolation: deterministic and linear in target_bytes
+    cfg = system_config_from_measurement(0.25, 1 << 20, mtbf=7200.0)
+    assert cfg.t_chk == 0.25 and cfg.mtbf == 7200.0
+    cfg2 = system_config_from_measurement(0.25, 1 << 20, mtbf=7200.0,
+                                          target_bytes=1 << 30)
+    assert cfg2.t_chk == pytest.approx(0.25 * 1024)
+    with pytest.raises(ValueError):
+        system_config_from_measurement(0.0, 1 << 20, mtbf=7200.0)
+
+    measured = measured_system_config(tree, mtbf=7200.0, repeats=2)
+    assert measured.t_chk > 0.0 and measured.mtbf == 7200.0
 
 
 def test_elastic_reshard_restores_onto_new_mesh(tmp_path):

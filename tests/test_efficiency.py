@@ -8,6 +8,7 @@ from repro.core.efficiency import (
     SystemConfig,
     efficiency_with,
     efficiency_without,
+    expected_overhead,
     scale_mtbf,
     tau_threshold,
     young_interval,
@@ -78,3 +79,78 @@ def test_efficiency_bounded_and_monotone_in_r(mtbf_h, t_chk, r):
     e2 = efficiency_with(cfg, min(r + 0.05, 0.995), t_s=0.02)
     assert 0.0 <= e1.efficiency <= 1.0
     assert e2.efficiency >= e1.efficiency - 1e-9  # higher R never hurts
+
+
+@given(t_chk=st.floats(1.0, 5000.0), mtbf_h=st.floats(0.5, 1000.0))
+@settings(max_examples=80, deadline=None)
+def test_young_interval_minimizes_expected_overhead(t_chk, mtbf_h):
+    """Young's interval is the exact argmin of the first-order overhead rate
+    it is derived from — no neighboring interval does better."""
+    mtbf = mtbf_h * 3600.0
+    T = young_interval(t_chk, mtbf)
+    best = expected_overhead(T, t_chk, mtbf)
+    for f in (0.5, 0.8, 0.95, 1.05, 1.25, 2.0):
+        assert best <= expected_overhead(T * f, t_chk, mtbf) + 1e-12, f
+
+
+@given(mtbf_h=st.floats(0.5, 1000.0), t_chk=st.floats(1.0, 5000.0))
+@settings(max_examples=60, deadline=None)
+def test_efficiency_without_bounded(mtbf_h, t_chk):
+    """Plain C/R efficiency is a fraction of wall time — always in [0, 1) —
+    and its breakdown accounts for the useful share exactly."""
+    cfg = SystemConfig(mtbf=mtbf_h * 3600.0, t_chk=t_chk)
+    r = efficiency_without(cfg)
+    assert 0.0 <= r.efficiency < 1.0
+    assert r.breakdown["useful"] == pytest.approx(r.efficiency * cfg.total_time)
+    assert r.n_checkpoints >= 0.0
+
+
+@given(
+    mtbf_h=st.floats(0.5, 200.0),
+    t_chk=st.floats(1.0, 5000.0),
+    r=st.floats(0.0, 0.99),
+)
+@settings(max_examples=60, deadline=None)
+def test_efficiency_monotone_in_mtbf(mtbf_h, t_chk, r):
+    """A more reliable machine is never less efficient, with or without
+    EasyCrash (paper Fig 11 read backwards)."""
+    a = SystemConfig(mtbf=mtbf_h * 3600.0, t_chk=t_chk)
+    b = SystemConfig(mtbf=1.5 * mtbf_h * 3600.0, t_chk=t_chk)
+    assert efficiency_without(b).efficiency >= \
+        efficiency_without(a).efficiency - 1e-9
+    assert efficiency_with(b, r, t_s=0.02).efficiency >= \
+        efficiency_with(a, r, t_s=0.02).efficiency - 1e-9
+
+
+@given(
+    mtbf_h=st.floats(2.0, 48.0),
+    t_chk=st.floats(30.0, 2000.0),
+    t_s=st.floats(0.005, 0.08),
+)
+@settings(max_examples=60, deadline=None)
+def test_tau_threshold_brackets_the_crossing(mtbf_h, t_chk, t_s):
+    """tau_threshold returns the minimum recomputability at which EasyCrash
+    wins: just above it EasyCrash beats plain C/R, just below it doesn't
+    (and inf means it never wins, not even at R -> 1)."""
+    cfg = SystemConfig(mtbf=mtbf_h * 3600.0, t_chk=t_chk)
+    base = efficiency_without(cfg).efficiency
+    tau = tau_threshold(cfg, t_s=t_s)
+    if math.isinf(tau):
+        assert efficiency_with(cfg, 0.999999, t_s).efficiency <= base
+        return
+    assert 0.0 <= tau <= 1.0
+    assert efficiency_with(cfg, min(tau + 1e-3, 0.999999), t_s).efficiency \
+        > base - 1e-12
+    if tau > 1e-3:
+        assert efficiency_with(cfg, tau - 1e-3, t_s).efficiency <= base + 1e-12
+
+
+def test_explicit_interval_overrides_young():
+    """The interval parameter feeds interval sweeps: Young is the default,
+    and a checkpoint-dominated interval is measurably worse."""
+    cfg = SystemConfig(mtbf=12 * 3600.0, t_chk=320.0)
+    T = young_interval(cfg.t_chk, cfg.mtbf)
+    assert efficiency_without(cfg, interval=T) == efficiency_without(cfg)
+    assert efficiency_without(cfg, interval=cfg.t_chk).efficiency \
+        < efficiency_without(cfg).efficiency
+    assert efficiency_with(cfg, 0.8, 0.02, interval=T * 2).interval == T * 2

@@ -26,13 +26,17 @@ GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "campaign_golden
 GOLDEN_CONFIG = {"n_tests": 8, "seed": 123, "plan": "none"}
 
 
-def _golden_campaign(name, fault_name=None):
+def _run_campaign(name, fault_name=None):
     app = ci_app(name)
     cache = default_cache(app)
     fault = get_fault_model(fault_name, app=app) if fault_name else None
     camp = CrashTester(
         app, PersistPlan.none(), cache, seed=GOLDEN_CONFIG["seed"], fault=fault
     ).run_campaign(GOLDEN_CONFIG["n_tests"])
+    return camp, fault
+
+
+def _campaign_entry(camp):
     counts = {c: 0 for c in ("S1", "S2", "S3", "S4")}
     for r in camp.records:
         counts[r.outcome] += 1
@@ -41,6 +45,22 @@ def _golden_campaign(name, fault_name=None):
         "golden_iters": camp.golden_iters,
         "crash_iters": [r.iter_idx for r in camp.records],
     }
+
+
+def _profile_entry(camp, fault=None):
+    """The campaign's RecomputeProfile as its canonical artifact payload:
+    pins the S1–S4 fractions *and* the extra-recompute-iteration histogram
+    bins, so profile drift (which would silently shift every downstream
+    system-efficiency number) fails loudly."""
+    from repro.core.artifacts import profile_to_payload
+    from repro.core.sysim import RecomputeProfile
+
+    return profile_to_payload(RecomputeProfile.from_campaign(camp, fault=fault))
+
+
+def _golden_campaign(name, fault_name=None):
+    camp, _ = _run_campaign(name, fault_name)
+    return _campaign_entry(camp)
 
 
 def _load_goldens():
@@ -70,6 +90,25 @@ def test_campaign_outcomes_match_golden(name):
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(CI_SIZES))
+def test_recompute_profile_matches_golden(name):
+    """The RecomputeProfile distilled from the pinned campaign — outcome
+    fractions, extra-iteration histogram bins, provenance — must reproduce
+    exactly: it is the contract between the campaign engine and the
+    system-efficiency simulator (repro.core.sysim)."""
+    goldens = _load_goldens()
+    assert "profiles" in goldens and name in goldens["profiles"], (
+        f"no golden RecomputeProfile pinned for {name}; --regen"
+    )
+    camp, fault = _run_campaign(name)
+    got = _profile_entry(camp, fault)
+    want = goldens["profiles"][name]
+    assert got == want, (
+        f"{name}: RecomputeProfile drifted:\n got {got}\nwant {want}"
+    )
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("name", sorted(FAULT_SWEEP_APPS))
 def test_torn_write_outcomes_match_golden(name):
     """Semantic drift in the fault subsystem (tearing bytes, per-test RNG
@@ -88,7 +127,11 @@ def test_torn_write_outcomes_match_golden(name):
 
 
 def _regen():
-    apps = {name: _golden_campaign(name) for name in sorted(CI_SIZES)}
+    apps, profiles = {}, {}
+    for name in sorted(CI_SIZES):
+        camp, fault = _run_campaign(name)
+        apps[name] = _campaign_entry(camp)
+        profiles[name] = _profile_entry(camp, fault)
     torn = {
         name: _golden_campaign(name, fault_name="torn-write")
         for name in sorted(FAULT_SWEEP_APPS)
@@ -96,13 +139,15 @@ def _regen():
     os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
     with open(GOLDEN_PATH, "w") as f:
         json.dump(
-            {"config": GOLDEN_CONFIG, "apps": apps, "torn_write_apps": torn},
+            {"config": GOLDEN_CONFIG, "apps": apps,
+             "torn_write_apps": torn, "profiles": profiles},
             f, indent=2, sort_keys=True,
         )
         f.write("\n")
     print(f"wrote {GOLDEN_PATH}")
     for name, g in apps.items():
-        print(f"  {name:12s} {g['counts']}")
+        print(f"  {name:12s} {g['counts']}  "
+              f"hist={profiles[name]['extra_iters_hist']}")
     for name, g in torn.items():
         print(f"  torn:{name:7s} {g['counts']}")
 
