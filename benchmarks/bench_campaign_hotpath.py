@@ -1,0 +1,101 @@
+"""Campaign hot-path: ref-vs-vec engine wall-clock and speedup.
+
+Three measurements per suite app, all on identical pre-planned campaigns:
+
+* ``ref``      — the historical engine (OrderedDict window LRU, per-test
+                 Python restart loop);
+* ``vec``      — the SoA window simulator + batched lane recompute, cold
+                 trace cache;
+* ``vec-warm`` — ``vec`` against a trace cache populated by a previous run
+                 of the same campaign (the replay / robustness-matrix case).
+
+Each configuration is run once unmeasured first so the numbers are
+steady-state engine throughput, not XLA compile time (the batched hooks
+jit one kernel per lane-bucket size).  S1–S4 fractions are asserted
+identical across engines — the speedup is only meaningful because the
+answers are bit-for-bit the same.
+
+Outputs ``benchmarks/results/campaign_hotpath.csv`` and the repo-root
+``BENCH_campaign.json`` — ``{app, engine, tests_per_sec, speedup}`` rows
+that track the perf trajectory across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import Timer, campaign_size, emit
+
+#: sor and pagerank opt into batched recompute; kmeans rides only the SoA
+#: window simulator + caches, keeping the report honest about where the
+#: speedup comes from
+HOTPATH_APPS = ("sor", "pagerank", "kmeans")
+
+BENCH_JSON = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_campaign.json")
+)
+
+
+def _run_once(name: str, engine: str, n_tests: int, fast: bool, tc=None):
+    from repro.core import CrashTester, PersistPlan
+    from repro.core.trace_cache import WindowTraceCache
+    from repro.hpc.suite import bench_app, ci_app, default_cache
+
+    app = (ci_app if fast else bench_app)(name)
+    tester = CrashTester(
+        app, PersistPlan.none(), default_cache(app), seed=123,
+        engine=engine,
+        trace_cache=tc if tc is not None else WindowTraceCache(0, 0),
+    )
+    with Timer() as t:
+        camp = tester.run_campaign(n_tests)
+    return camp, t.dt
+
+
+def run(fast: bool = True) -> None:
+    from repro.core.trace_cache import WindowTraceCache
+
+    n_tests = campaign_size(fast)
+    rows = []
+    for name in HOTPATH_APPS:
+        # unmeasured passes: golden-run kernels + every lane-bucket jit
+        for engine in ("ref", "vec"):
+            _run_once(name, engine, n_tests, fast)
+
+        camp_ref, dt_ref = _run_once(name, "ref", n_tests, fast)
+        camp_vec, dt_vec = _run_once(name, "vec", n_tests, fast)
+        assert camp_ref.class_fractions() == camp_vec.class_fractions(), (
+            f"{name}: engines disagree — speedup numbers would be meaningless"
+        )
+        warm_tc = WindowTraceCache()
+        _run_once(name, "vec", n_tests, fast, tc=warm_tc)
+        _, dt_warm = _run_once(name, "vec", n_tests, fast, tc=warm_tc)
+
+        for engine, dt in (("ref", dt_ref), ("vec", dt_vec), ("vec-warm", dt_warm)):
+            rows.append({
+                "app": name,
+                "engine": engine,
+                "n_tests": n_tests,
+                "seconds": round(dt, 3),
+                "tests_per_sec": round(n_tests / dt, 1),
+                "speedup": round(dt_ref / dt, 2),
+            })
+    emit(rows, "campaign_hotpath")
+
+    payload = {
+        "config": {"fast": bool(fast), "n_tests": n_tests, "seed": 123},
+        "results": [
+            {k: r[k] for k in ("app", "engine", "tests_per_sec", "speedup")}
+            for r in rows
+        ],
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[campaign_hotpath] wrote {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(fast="--full" not in sys.argv)

@@ -1,5 +1,7 @@
 """Benchmark harness: one module per paper table/figure.
 
+  bench_campaign_hotpath— ref-vs-vec campaign engine tests/sec + speedup
+                          (writes the repo-root BENCH_campaign.json)
   bench_recomputability — Fig 3 + Fig 6 (fault-model sweep, robustness matrix)
   bench_selection       — Fig 4a/4b + Fig 5
   bench_persist_overhead— Table 4
@@ -12,24 +14,54 @@
   bench_roofline        — §Roofline table from the dry-run artifacts
 
 ``python -m benchmarks.run [--full]`` — default is the fast (CI-sized)
-configuration; --full uses the paper-sized campaigns.
+configuration; --full uses the paper-sized campaigns.  ``--profile`` wraps
+each selected benchmark in cProfile and drops the top-30 cumulative entries
+next to its results, so perf work can point at measured hot spots instead
+of guessed ones.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 import traceback
+
+
+def _run_profiled(name: str, fn, fast: bool) -> None:
+    import cProfile
+    import pstats
+
+    from .common import RESULTS_DIR
+
+    pr = cProfile.Profile()
+    pr.enable()
+    try:
+        fn(fast=fast)
+    finally:
+        pr.disable()
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, f"profile_{name}.txt")
+        with open(path, "w") as f:
+            stats = pstats.Stats(pr, stream=f)
+            stats.sort_stats("cumulative").print_stats(30)
+        print(f"[{name}] profile (top-30 cumulative) -> {path}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument(
+        "--profile", action="store_true",
+        help="cProfile each selected benchmark; top-30 cumulative entries "
+             "are written to benchmarks/results/profile_<name>.txt",
+    )
     args = ap.parse_args()
     fast = not args.full
 
     from . import (
+        bench_campaign_hotpath,
         bench_efficiency,
         bench_kernels,
         bench_nvm_writes,
@@ -42,6 +74,7 @@ def main() -> None:
     )
 
     benches = [
+        ("campaign_hotpath", bench_campaign_hotpath.run),
         ("recomputability", bench_recomputability.run),
         ("fault_sweep", bench_recomputability.fault_sweep),
         ("robustness_matrix", bench_recomputability.robustness_matrix),
@@ -62,7 +95,10 @@ def main() -> None:
         print(f"\n===== {name} =====")
         t0 = time.time()
         try:
-            fn(fast=fast)
+            if args.profile:
+                _run_profiled(name, fn, fast)
+            else:
+                fn(fast=fast)
             print(f"[{name}] done in {time.time()-t0:.0f}s")
         except Exception:
             failed.append(name)

@@ -28,7 +28,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core import CacheConfig, CrashTester, PersistPlan
+from repro.core import ENGINES, CacheConfig, CrashTester, PersistPlan
 from repro.core.faults import FAULT_MODELS, get_fault_model
 from repro.core.selection import select_objects
 from repro.models.train_app import LMTrainApp
@@ -49,6 +49,11 @@ def main() -> None:
                     choices=sorted(FAULT_MODELS),
                     help="failure model for the campaign (default: the "
                          "paper's clean power failure)")
+    ap.add_argument("--engine", default=None, choices=list(ENGINES),
+                    help="campaign hot path: 'vec' (SoA window simulator + "
+                         "batched recompute, the default) or 'ref' (the "
+                         "historical oracle); results are bit-for-bit "
+                         "identical")
     args = ap.parse_args()
 
     app = LMTrainApp(base=get_arch(args.arch), n_iters=args.iters,
@@ -61,9 +66,9 @@ def main() -> None:
           f"cache={cache.capacity_blocks} blocks of {ws_blocks}; "
           f"fault model: {fault.spec()}")
 
-    base = CrashTester(app, PersistPlan.none(), cache, seed=0, fault=fault).run_campaign(
-        args.tests, n_workers=args.workers, store_path=args.store
-    )
+    base = CrashTester(
+        app, PersistPlan.none(), cache, seed=0, fault=fault, engine=args.engine
+    ).run_campaign(args.tests, n_workers=args.workers, store_path=args.store)
     print(f"\nbaseline (no persistence): {base.class_fractions()}")
     print("per-object inconsistency -> recompute correlation (paper §5.1):")
     for s in select_objects(base, [c for c in app.candidates if c != "k"]):
@@ -76,7 +81,8 @@ def main() -> None:
     print("mean inconsistency rates:", {k: round(v, 3) for k, v in mean_inc.items()})
 
     ec = CrashTester(app, PersistPlan.at_loop_end(("params",), app), cache,
-                     seed=0, fault=fault).run_campaign(args.tests, n_workers=args.workers)
+                     seed=0, fault=fault, engine=args.engine).run_campaign(
+                         args.tests, n_workers=args.workers)
     print(f"\npersist params at loop end: {ec.class_fractions()}")
     print(f"recomputability {base.recomputability:.0%} -> {ec.recomputability:.0%}")
     print("\ntakeaway: SGD/Adam training is a naturally-resilient iterative "

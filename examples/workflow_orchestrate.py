@@ -35,6 +35,7 @@ def main() -> None:
         save_profile,
         save_workflow,
     )
+    from repro.core.cache_sim import ENGINES
     from repro.core.campaign_store import WorkflowStore
     from repro.core.faults import FAULT_MODELS, get_fault_model
     from repro.core.workflow import run_workflow
@@ -57,6 +58,9 @@ def main() -> None:
     ap.add_argument("--kill-after-shards", type=int, default=0, metavar="N",
                     help="os._exit(137) after N durably stored shards "
                          "(simulated kill -9; requires --workflow-store)")
+    ap.add_argument("--engine", default=None, choices=list(ENGINES),
+                    help="campaign hot path (default vec); bit-for-bit "
+                         "identical results either way")
     args = ap.parse_args()
     if args.kill_after_shards and not args.workflow_store:
         ap.error("--kill-after-shards requires --workflow-store (the kill "
@@ -87,6 +91,7 @@ def main() -> None:
         region_measure=args.region_measure, n_workers=args.workers,
         fault_model=fault, store_path=args.workflow_store,
         shard_callback=on_shard if args.workflow_store else None,
+        engine=args.engine,
     )
 
     print(f"\napp={args.app} fault={fault.spec()} workers={args.workers}")

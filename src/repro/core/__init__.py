@@ -14,6 +14,7 @@ from .blocks import (
     num_blocks,
 )
 from .cache_sim import (
+    ENGINES,
     CacheConfig,
     Flush,
     RegionEvents,
@@ -21,6 +22,7 @@ from .cache_sim import (
     TornBlock,
     resolve_window_images,
     simulate_window,
+    simulate_window_vec,
 )
 from .campaign_store import CampaignStore, CampaignStoreError, WorkflowStore
 from .crash_tester import (
@@ -29,7 +31,9 @@ from .crash_tester import (
     CrashTester,
     PersistPlan,
     PlannedTest,
+    default_engine,
 )
+from .trace_cache import WindowTraceCache, shared_trace_cache
 from .faults import (
     FAULT_MODELS,
     BitFlip,
@@ -91,9 +95,11 @@ __all__ = [
     "NVMArena", "WriteStats", "DEFAULT_BLOCK_BYTES", "block_diff_mask",
     "inconsistent_rate", "mix_blocks", "num_blocks", "CacheConfig", "Flush",
     "RegionEvents", "Sweep", "TornBlock", "resolve_window_images",
-    "simulate_window", "CampaignStore", "CampaignStoreError", "WorkflowStore",
+    "simulate_window", "simulate_window_vec", "ENGINES",
+    "CampaignStore", "CampaignStoreError", "WorkflowStore",
     "CampaignResult",
     "CrashRecord", "CrashTester", "PersistPlan", "PlannedTest",
+    "default_engine", "WindowTraceCache", "shared_trace_cache",
     "FAULT_MODELS", "BitFlip", "CorrelatedRegion", "FaultModel", "MultiCrash",
     "PowerFail", "TornWrite", "all_fault_models", "fault_model_from_spec",
     "get_fault_model",

@@ -23,16 +23,33 @@ iteration touches more blocks than the cache holds (the paper selects inputs
 so the footprint exceeds the LLC; small-footprint apps are explicitly
 EasyCrash-unsuitable, §8).  ``tests/test_cache_sim.py`` cross-checks the
 record machinery against a brute-force simulator with hypothesis.
+
+Two window-simulation engines produce bit-for-bit identical
+:class:`WindowTrace` output:
+
+* ``engine="ref"`` — the exact per-access ``OrderedDict`` LRU
+  (:func:`simulate_window`'s historical body), kept as the reference oracle;
+* ``engine="vec"`` — :func:`simulate_window_vec`, a structure-of-arrays
+  simulator that walks the access stream *run-at-a-time*: the LRU recency
+  list is represented as a deque of block-range runs with lazy invalidation,
+  sweeps are processed as hit/miss groups, and eviction write-backs, flush
+  events and timestamps come out of NumPy array ops instead of per-access
+  dict mutation.  ``tests/test_campaign_vec.py`` holds the differential and
+  property equivalence suite.
 """
 from __future__ import annotations
 
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .blocks import DEFAULT_BLOCK_BYTES
+
+#: window-simulation engines accepted by :func:`simulate_window` and the
+#: campaign layers above it (``CrashTester(engine=...)``)
+ENGINES = ("ref", "vec")
 
 
 class TornBlock(NamedTuple):
@@ -129,14 +146,42 @@ class WindowTrace:
                 return span
         return self.spans[-1]
 
+    def sweep_soa(self) -> Tuple[np.ndarray, np.ndarray]:
+        """SoA view of the write sweeps: ``(t_start, n_blocks)`` arrays in
+        sweep order.  Sweeps never overlap in time, so the sweep in flight at
+        a crash time (if any) is found by one ``searchsorted`` over
+        ``t_start`` instead of a Python scan — the fault models' tearing
+        hooks use this to locate the store queue they operate on."""
+        soa = getattr(self, "_sweep_soa", None)
+        if soa is None or soa[0].size != len(self.sweeps):
+            soa = (
+                np.fromiter((s.t_start for s in self.sweeps), np.int64, len(self.sweeps)),
+                np.fromiter((s.n_blocks for s in self.sweeps), np.int64, len(self.sweeps)),
+            )
+            # WindowTrace is a plain (unfrozen) dataclass: memoize in place
+            self._sweep_soa = soa
+        return soa
+
 
 class _LRU:
-    """Exact fully-associative LRU write-back cache at block granularity."""
+    """Exact fully-associative LRU write-back cache at block granularity.
+
+    Alongside the recency dict, a per-object *dirty-block index* is
+    maintained on every access / eviction / clean: ``_dirty[obj]`` maps
+    block -> writer seq in recency order restricted to that object's dirty
+    lines.  ``dirty_lines_of`` / ``dirty_resident_mask`` read the index in
+    O(dirty blocks of obj) instead of walking the full cache — the historical
+    full-cache scans made every flush (and every per-crash-point mask) cost
+    O(capacity) regardless of how little of the object was dirty.
+    """
 
     def __init__(self, capacity: int):
         self.capacity = capacity
         # (obj, block) -> writer seq (or -1 if clean)
         self._lines: "OrderedDict[Tuple[str, int], int]" = OrderedDict()
+        # obj -> OrderedDict[block, seq]: the object's dirty lines, in the
+        # same relative recency order they hold in _lines
+        self._dirty: Dict[str, "OrderedDict[int, int]"] = {}
 
     def access(self, key: Tuple[str, int], writer_seq: int) -> Optional[Tuple[str, int, int]]:
         """Access one block; returns an eviction record (obj, block, seq) or None.
@@ -147,28 +192,45 @@ class _LRU:
         prev = lines.pop(key, None)
         if prev is None and len(lines) >= self.capacity:
             evk, evseq = lines.popitem(last=False)
-            evicted = (evk[0], evk[1], evseq) if evseq >= 0 else None
+            if evseq >= 0:
+                del self._dirty[evk[0]][evk[1]]
+                evicted = (evk[0], evk[1], evseq)
+            else:
+                evicted = None
         else:
             evicted = None
         if writer_seq >= 0:
             lines[key] = writer_seq
+            d = self._dirty.setdefault(key[0], OrderedDict())
+            d.pop(key[1], None)
+            d[key[1]] = writer_seq
         else:
-            lines[key] = prev if prev is not None and prev >= 0 else -1
+            keep = prev if prev is not None and prev >= 0 else -1
+            lines[key] = keep
+            if keep >= 0:
+                # a read hit of a dirty line moves it to MRU: mirror the move
+                d = self._dirty[key[0]]
+                d.pop(key[1], None)
+                d[key[1]] = keep
         return evicted
 
     def dirty_lines_of(self, obj: str) -> List[Tuple[int, int]]:
-        return [(blk, seq) for (o, blk), seq in self._lines.items() if o == obj and seq >= 0]
+        return list(self._dirty.get(obj, {}).items())
 
     def clean_obj(self, obj: str) -> None:
-        for k in list(self._lines.keys()):
-            if k[0] == obj and self._lines[k] >= 0:
-                self._lines[k] = -1
+        d = self._dirty.get(obj)
+        if not d:
+            return
+        lines = self._lines
+        for blk in d:
+            lines[(obj, blk)] = -1  # in-place: cleaning never changes recency
+        d.clear()
 
     def dirty_resident_mask(self, obj: str, n_blocks: int) -> np.ndarray:
         m = np.zeros(n_blocks, dtype=bool)
-        for (o, blk), seq in self._lines.items():
-            if o == obj and seq >= 0:
-                m[blk] = True
+        d = self._dirty.get(obj)
+        if d:
+            m[np.fromiter(d.keys(), np.int64, len(d))] = True
         return m
 
 
@@ -176,12 +238,22 @@ def simulate_window(
     cfg: CacheConfig,
     obj_blocks: Mapping[str, int],
     regions: Sequence[RegionEvents],
+    engine: str = "ref",
 ) -> WindowTrace:
     """Run the event trace once; emit timestamped write-back records.
 
     Time advances by one unit per block access.  Flushes are instantaneous
     (they do not advance time) — the paper measures flush cost separately.
+
+    ``engine`` selects the simulator: ``"ref"`` (default here — the exact
+    per-access oracle this function has always been) or ``"vec"`` (the SoA
+    run-at-a-time engine, :func:`simulate_window_vec`).  Both produce
+    bit-for-bit identical :class:`WindowTrace` output.
     """
+    if engine == "vec":
+        return simulate_window_vec(cfg, obj_blocks, regions)
+    if engine != "ref":
+        raise ValueError(f"unknown window engine {engine!r}; have {ENGINES}")
     cache = _LRU(cfg.capacity_blocks)
     wb: Dict[str, List[Tuple[int, int, int]]] = {o: [] for o in obj_blocks}
     sweeps: List[SweepRecord] = []
@@ -237,6 +309,226 @@ def simulate_window(
             trace.wb_t[o] = arr[:, 0]
             trace.wb_block[o] = arr[:, 1]
             trace.wb_seq[o] = arr[:, 2]
+        else:
+            trace.wb_t[o] = np.zeros(0, dtype=np.int64)
+            trace.wb_block[o] = np.zeros(0, dtype=np.int64)
+            trace.wb_seq[o] = np.zeros(0, dtype=np.int64)
+    return trace
+
+
+# ------------------------------------------------------------ the SoA engine
+class _RunLRU:
+    """Run-structured exact LRU: the recency list as a deque of block runs.
+
+    The access stream of :func:`simulate_window` is highly structured — whole
+    objects swept block 0..nb-1 in order, hot objects re-read in full — so
+    the LRU recency list is, at all times, a concatenation of *runs* of
+    blocks of one object.  This class maintains that run list directly:
+
+    * ``runs`` — deque of ``[run_id, obj, blocks]`` from LRU (head) to MRU
+      (tail), with **lazy invalidation**: when a block is re-accessed it is
+      appended to a new tail run and its old entry goes stale; stale entries
+      are filtered with one vectorized ``loc`` comparison when the head is
+      popped for eviction.
+    * ``loc[obj][blk]`` — id of the run the block validly resides in (-1 when
+      not resident); ``seq[obj][blk]`` — the dirty writer seq (-1 clean).
+
+    A sweep is processed as alternating *hit groups* (move a block range to
+    MRU: one run append) and *miss groups* (insert a range; evict exactly the
+    overflow from the head, write-back records and their timestamps emitted
+    as array slices).  Per-event cost is O(runs touched), not O(blocks).
+
+    Equivalence argument for the miss group (the one subtle case): evictions
+    pop valid lines strictly from the head while the group's own blocks are
+    appended at the tail, and the k-th eviction of a group of n misses
+    happens at access index ``no_evict + k`` — before that access's insert.
+    A group block can therefore only be popped after every older valid line
+    is consumed, by which point at least as many group blocks have been
+    inserted as are popped, which is exactly the per-access order the
+    reference engine executes.  ``tests/test_campaign_vec.py`` checks the
+    equivalence property against the oracle under hypothesis.
+    """
+
+    __slots__ = ("capacity", "size", "runs", "loc", "seq", "_next_id")
+
+    def __init__(self, capacity: int, obj_blocks: Mapping[str, int]):
+        self.capacity = capacity
+        self.size = 0
+        self.runs: "deque[list]" = deque()
+        self.loc = {o: np.full(nb, -1, np.int64) for o, nb in obj_blocks.items()}
+        self.seq = {o: np.full(nb, -1, np.int64) for o, nb in obj_blocks.items()}
+        self._next_id = 0
+
+    def _new_run(self, obj: str, lo: int, hi: int) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.runs.append([rid, obj, np.arange(lo, hi, dtype=np.int64)])
+        return rid
+
+    def access_range(
+        self,
+        obj: str,
+        lo: int,
+        hi: int,
+        w_seq: int,
+        t0: int,
+        dt: int,
+        emit: Callable[[str, np.ndarray, np.ndarray, np.ndarray], None],
+    ) -> None:
+        """Access blocks ``lo..hi-1`` of ``obj`` in order; access ``j``
+        happens at time ``t0 + dt*(j-lo)`` (``dt=0``: hot refresh, which the
+        sweep clock treats as free)."""
+        loc = self.loc[obj]
+        j = lo
+        while j < hi:
+            res = loc[j:hi] >= 0
+            first = bool(res[0])
+            flips = np.flatnonzero(res != first)
+            glen = int(flips[0]) if flips.size else (hi - j)
+            if first:
+                self._hit_group(obj, j, j + glen, w_seq)
+            else:
+                self._miss_group(obj, j, j + glen, w_seq, t0 + dt * (j - lo), dt, emit)
+            j += glen
+
+    def _hit_group(self, obj: str, lo: int, hi: int, w_seq: int) -> None:
+        # re-accessed resident blocks move to MRU; reads keep their dirty seq
+        rid = self._new_run(obj, lo, hi)
+        self.loc[obj][lo:hi] = rid
+        if w_seq >= 0:
+            self.seq[obj][lo:hi] = w_seq
+
+    def _miss_group(
+        self, obj: str, lo: int, hi: int, w_seq: int, t0: int, dt: int, emit
+    ) -> None:
+        n = hi - lo
+        no_evict = min(n, max(0, self.capacity - self.size))
+        n_evict = n - no_evict
+        rid = self._new_run(obj, lo, hi)
+        self.loc[obj][lo:hi] = rid
+        self.seq[obj][lo:hi] = w_seq if w_seq >= 0 else -1
+        self.size += no_evict  # each evicting access pops one line, inserts one
+        if n_evict:
+            times = t0 + dt * (no_evict + np.arange(n_evict, dtype=np.int64))
+            self._evict(n_evict, times, emit)
+
+    def _evict(self, n_evict: int, times: np.ndarray, emit) -> None:
+        k = 0
+        while k < n_evict:
+            run = self.runs[0]
+            rid, obj, blocks = run
+            valid = np.flatnonzero(self.loc[obj][blocks] == rid)
+            if valid.size == 0:
+                self.runs.popleft()
+                continue
+            take = min(valid.size, n_evict - k)
+            idx = valid[:take]
+            segs = blocks[idx]
+            seqs = self.seq[obj][segs]
+            dirty = seqs >= 0
+            if dirty.any():
+                emit(obj, times[k:k + take][dirty], segs[dirty], seqs[dirty])
+            self.loc[obj][segs] = -1
+            if take == valid.size:
+                self.runs.popleft()
+            else:
+                run[2] = blocks[int(idx[take - 1]) + 1:]
+            k += take
+
+    def flush(self, obj: str, t: int, emit) -> int:
+        """CLWB ``obj``: emit its dirty resident lines in recency order (the
+        reference engine's OrderedDict walk order), clean them in place."""
+        n_dirty = 0
+        seq = self.seq[obj]
+        loc = self.loc[obj]
+        for run in self.runs:
+            rid, o, blocks = run
+            if o != obj:
+                continue
+            mask = (loc[blocks] == rid) & (seq[blocks] >= 0)
+            if mask.any():
+                segs = blocks[mask]
+                emit(obj, np.full(segs.size, t, np.int64), segs, seq[segs])
+                seq[segs] = -1
+                n_dirty += segs.size
+        return int(n_dirty)
+
+
+def simulate_window_vec(
+    cfg: CacheConfig,
+    obj_blocks: Mapping[str, int],
+    regions: Sequence[RegionEvents],
+) -> WindowTrace:
+    """SoA window simulator: bit-for-bit :func:`simulate_window`, array-at-a-time.
+
+    The event stream is walked run-at-a-time through :class:`_RunLRU`;
+    write-back records (eviction and flush) are emitted as array batches in
+    the reference engine's exact emission order, so the stable per-object
+    time sort below reproduces its ``wb_*`` arrays exactly — including the
+    relative order of same-timestamp records, which the batch image resolver
+    and the tearing hooks both rely on.
+    """
+    cache = _RunLRU(cfg.capacity_blocks, obj_blocks)
+    wb: Dict[str, List[Tuple[np.ndarray, np.ndarray, np.ndarray]]] = {
+        o: [] for o in obj_blocks
+    }
+    sweeps: List[SweepRecord] = []
+    spans: List[Tuple[int, int, int, int, int]] = []
+    trace = WindowTrace(
+        obj_blocks=dict(obj_blocks),
+        wb_t={}, wb_block={}, wb_seq={}, sweeps=sweeps, spans=spans, t_end=0,
+    )
+
+    def emit(obj: str, ts: np.ndarray, blks: np.ndarray, seqs: np.ndarray) -> None:
+        wb[obj].append((ts, blks, seqs))
+        trace.eviction_writes += ts.size
+
+    t = 0
+    for reg in regions:
+        t0 = t
+        for ev in reg.events:
+            if isinstance(ev, Sweep):
+                nb = obj_blocks[ev.obj]
+                if ev.write:
+                    sweeps.append(SweepRecord(t, ev.obj, reg.seq, nb))
+                writer = reg.seq if ev.write else -1
+                if not ev.hot:
+                    cache.access_range(ev.obj, 0, nb, writer, t, 1, emit)
+                    t += nb
+                else:
+                    # hot refreshes fire after each access b with
+                    # b % hot_every == hot_every - 1, at the already-advanced
+                    # clock; the refresh accesses are free (dt=0)
+                    e = ev.hot_every
+                    b = 0
+                    while b < nb:
+                        ce = min(nb, (b // e + 1) * e)
+                        cache.access_range(ev.obj, b, ce, writer, t, 1, emit)
+                        t += ce - b
+                        if ce % e == 0:
+                            for h in ev.hot:
+                                cache.access_range(h, 0, obj_blocks[h], -1, t, 0, emit)
+                        b = ce
+            elif isinstance(ev, Flush):
+                n_dirty = cache.flush(
+                    ev.obj, t, lambda obj, ts, blks, seqs: wb[obj].append((ts, blks, seqs))
+                )
+                trace.flush_writes += n_dirty
+                trace.flushed_clean_blocks += obj_blocks[ev.obj] - n_dirty
+                trace.flush_ops += 1
+            else:  # pragma: no cover - defensive
+                raise TypeError(f"unknown event {ev!r}")
+        spans.append((reg.seq, reg.iter_idx, reg.region_idx, t0, t))
+    trace.t_end = t
+    for o, batches in wb.items():
+        if batches:
+            ts = np.concatenate([b[0] for b in batches])
+            blks = np.concatenate([b[1] for b in batches])
+            seqs = np.concatenate([b[2] for b in batches])
+            order = np.argsort(ts, kind="stable")
+            trace.wb_t[o] = ts[order]
+            trace.wb_block[o] = blks[order]
+            trace.wb_seq[o] = seqs[order]
         else:
             trace.wb_t[o] = np.zeros(0, dtype=np.int64)
             trace.wb_block[o] = np.zeros(0, dtype=np.int64)

@@ -31,6 +31,7 @@ import numpy as np
 
 from .blocks import inconsistent_rate
 from .cache_sim import (
+    ENGINES,
     CacheConfig,
     Flush,
     RegionEvents,
@@ -42,6 +43,28 @@ from .cache_sim import (
 )
 from .faults import FaultModel, PowerFail
 from .regions import IterativeApp, Region, State, VerifyResult, object_blocks
+from .trace_cache import WindowPayload, WindowTraceCache, shared_trace_cache
+
+
+def default_engine() -> str:
+    """Window/recompute engine when none is requested: ``REPRO_ENGINE`` in
+    the environment, else ``"vec"`` (the engines are bit-for-bit identical,
+    so the default is simply the fast one)."""
+    eng = os.environ.get("REPRO_ENGINE", "vec")
+    if eng not in ENGINES:
+        raise ValueError(f"REPRO_ENGINE={eng!r}: unknown engine; have {ENGINES}")
+    return eng
+
+
+def _lane_batch_target() -> int:
+    """Lanes the vec engine aims to stack per batched-recompute call
+    (``REPRO_LANE_BATCH``); also the shard-chunk size of
+    :meth:`CrashTester.run_shards`, which bounds how many resolved NVM
+    images are held at once."""
+    try:
+        return max(1, int(os.environ.get("REPRO_LANE_BATCH", "64")))
+    except ValueError:
+        return 64
 
 
 @dataclass(frozen=True)
@@ -151,19 +174,35 @@ class CrashTester:
         seed: int = 0,
         max_extra_factor: float = 2.0,
         fault: Optional[FaultModel] = None,
+        engine: Optional[str] = None,
+        trace_cache: Optional[WindowTraceCache] = None,
     ):
+        """``engine`` selects the campaign hot path — ``"vec"`` (SoA window
+        simulator, batched recompute for apps with ``supports_batched_step``)
+        or ``"ref"`` (the historical per-access / per-test oracle); ``None``
+        resolves :func:`default_engine`.  Results are bit-for-bit identical.
+
+        ``trace_cache`` is the cross-campaign window cache; ``None`` uses the
+        process-shared one (:func:`~repro.core.trace_cache.shared_trace_cache`).
+        Pass a private :class:`~repro.core.trace_cache.WindowTraceCache` to
+        isolate a tester (benchmarks measuring cold paths do)."""
         self.app = app
         self.plan = plan
         self.cache = cache
         self.seed = seed
         self.max_extra_factor = max_extra_factor
         self.fault = fault if fault is not None else PowerFail()
+        self.engine = engine if engine is not None else default_engine()
+        if self.engine not in ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}; have {ENGINES}")
+        self._trace_cache = trace_cache if trace_cache is not None else shared_trace_cache()
         self._golden_states: Optional[List[State]] = None
         self._golden_iters: int = 0
         self._golden_final: Optional[State] = None
         self._window_cache: Dict[int, Tuple[WindowTrace, Dict[int, Dict[str, np.ndarray]], int]] = {}
         self._iter_time: Optional[int] = None
         self._region_spans: Optional[List[Tuple[int, int]]] = None
+        self._digest: Optional[str] = None
 
     # ---------------------------------------------------------------- golden
     def _ensure_golden(self) -> None:
@@ -233,6 +272,49 @@ class CrashTester:
                 events.append(Flush(o))
         return events
 
+    def _window_payload(self, state0: State, first: int, last: int) -> WindowPayload:
+        """The plan-independent half of a window simulation: re-run the
+        region functions over iterations [first, last] from ``state0`` (not
+        mutated) and snapshot each region occurrence's written values."""
+        app = self.app
+        regs = app.regions()
+        state = {k: np.array(v, copy=True) for k, v in state0.items()}
+        tracked = self._tracked_objects(state)
+        obj_blocks = object_blocks(state, tracked, self.cache.block_bytes)
+        seq_values: Dict[int, Dict[str, np.ndarray]] = {}
+        meta: List[Tuple[int, int, int]] = []
+        seq = 0
+        for it in range(first, last + 1):
+            for ridx, region in enumerate(regs):
+                state = region.fn(state)
+                seq_values[seq] = {
+                    o: np.array(state[o], copy=True) for o in region.writes if o in state
+                }
+                meta.append((seq, it, ridx))
+                seq += 1
+        return WindowPayload(seq_values, obj_blocks, tuple(meta))
+
+    def _trace_from_payload(
+        self, payload: WindowPayload, last: int
+    ) -> Tuple[WindowTrace, Dict[int, Dict[str, np.ndarray]], int]:
+        """The plan-dependent half: rebuild the event stream (flushes come
+        from the persist plan) and run the selected cache-sim engine."""
+        regs = self.app.regions()
+        region_events = [
+            RegionEvents(
+                seq=seq,
+                iter_idx=it,
+                region_idx=ridx,
+                events=tuple(self._region_events(regs[ridx], ridx, it)),
+            )
+            for (seq, it, ridx) in payload.meta
+        ]
+        trace = simulate_window(
+            self.cache, payload.obj_blocks, region_events, engine=self.engine
+        )
+        crash_span_start = next(t0 for (s, it, ridx, t0, t1) in trace.spans if it == last)
+        return trace, payload.seq_values, crash_span_start
+
     def _simulate_window_from(
         self, state0: State, first: int, last: int
     ) -> Tuple[WindowTrace, Dict[int, Dict[str, np.ndarray]], int]:
@@ -242,45 +324,56 @@ class CrashTester:
         written values, and the time the *last* iteration's span starts at
         (crash times are drawn from the last iteration of a window).
         """
-        app = self.app
-        regs = app.regions()
-        state = {k: np.array(v, copy=True) for k, v in state0.items()}
-        tracked = self._tracked_objects(state)
-        obj_blocks = object_blocks(state, tracked, self.cache.block_bytes)
+        return self._trace_from_payload(
+            self._window_payload(state0, first, last), last
+        )
 
-        region_events: List[RegionEvents] = []
-        seq_values: Dict[int, Dict[str, np.ndarray]] = {}
-        seq = 0
-        for it in range(first, last + 1):
-            for ridx, region in enumerate(regs):
-                state = region.fn(state)
-                seq_values[seq] = {
-                    o: np.array(state[o], copy=True) for o in region.writes if o in state
-                }
-                region_events.append(
-                    RegionEvents(
-                        seq=seq,
-                        iter_idx=it,
-                        region_idx=ridx,
-                        events=tuple(self._region_events(region, ridx, it)),
-                    )
-                )
-                seq += 1
-        trace = simulate_window(self.cache, obj_blocks, region_events)
-        crash_span_start = next(t0 for (s, it, ridx, t0, t1) in trace.spans if it == last)
-        return trace, seq_values, crash_span_start
+    def _flush_schedule(self, first: int, last: int) -> Tuple[tuple, tuple]:
+        """The window's *effective* flush schedule — which (iteration,
+        region) slots actually fire, and what they flush.  Plans that fire
+        nothing inside a window normalize to the same (empty) key, so e.g. a
+        region-isolated campaign shares the baseline trace for windows its
+        flush frequency skips."""
+        fired = tuple(
+            (it, ridx)
+            for it in range(first, last + 1)
+            for ridx, x in sorted(self.plan.region_freq.items())
+            if x and it % x == 0
+        )
+        return (fired, tuple(self.plan.objects)) if fired else ((), ())
 
     def _simulate_crash_window(
         self, crash_iter: int
     ) -> Tuple[WindowTrace, Dict[int, Dict[str, np.ndarray]], int]:
-        """Simulate iterations [crash_iter-1, crash_iter] once; cache result."""
+        """Simulate iterations [crash_iter-1, crash_iter] once; cache result.
+
+        Two cache layers: the tester-local ``_window_cache`` (this campaign)
+        and the process-shared :class:`WindowTraceCache`, which lets the
+        other campaigns of a workflow — and replays of the same plan under
+        other fault models — reuse the window instead of re-simulating it.
+        """
         if crash_iter in self._window_cache:
             return self._window_cache[crash_iter]
         self._ensure_golden()
         first = max(0, crash_iter - 1)
-        result = self._simulate_window_from(
-            self._golden_states[first], first, crash_iter
+        shared = self._trace_cache
+        wkey = (shared.app_token(self.app), self._state_digest(), first, crash_iter)
+        tkey = wkey + (
+            int(self.cache.capacity_blocks),
+            int(self.cache.block_bytes),
+            self._flush_schedule(first, crash_iter),
+            self.engine,
         )
+        result = shared.get_trace(tkey)
+        if result is None:
+            payload = shared.get_payload(wkey + (int(self.cache.block_bytes),))
+            if payload is None:
+                payload = self._window_payload(
+                    self._golden_states[first], first, crash_iter
+                )
+                shared.put_payload(wkey + (int(self.cache.block_bytes),), payload)
+            result = self._trace_from_payload(payload, crash_iter)
+            shared.put_trace(tkey, result)
         self._window_cache[crash_iter] = result
         return result
 
@@ -373,9 +466,24 @@ class CrashTester:
 
         The window is simulated once and **all** its crash points are
         resolved in a single vectorial pass over the window's write-back
-        records (:func:`resolve_window_images`); only the per-test restart
-        and classification remain per-crash work.
+        records (:func:`resolve_window_images`).  On the ``"vec"`` engine,
+        apps that declare ``supports_batched_step`` then run the restart /
+        recompute phase as stacked lanes with per-lane early-exit masks
+        (:meth:`_classify_lanes_batched`) instead of one Python loop per
+        test; results are bit-for-bit the serial classification.
         """
+        items = self._prepare_window_items(crash_iter, tests)
+        outcomes = self._classify_items(items, crash_iter)
+        return [
+            self._record_for(crash_iter, item, outcome)
+            for item, outcome in zip(items, outcomes)
+        ]
+
+    def _prepare_window_items(
+        self, crash_iter: int, tests: Sequence[PlannedTest]
+    ) -> List[dict]:
+        """Simulate + resolve one window: everything up to (but excluding)
+        the restart/classification phase, one dict per planned test."""
         self._ensure_golden()
         app = self.app
         trace, seq_values, _ = self._simulate_crash_window(crash_iter)
@@ -401,7 +509,7 @@ class CrashTester:
         protected = tuple(self.plan.objects)
         if app.iterator_object:
             protected += (app.iterator_object,)
-        out: List[Tuple[int, CrashRecord]] = []
+        items: List[dict] = []
         for test, nvm, live in zip(tests, nvms, lives):
             seq, it, region_idx, t0, t1 = trace.span_for_time(test.crash_t)
             frac = (test.crash_t - t0) / max(1, (t1 - t0))
@@ -418,20 +526,217 @@ class CrashTester:
             if app.iterator_object and app.iterator_object in persisted:
                 bookmark = np.asarray(persisted[app.iterator_object])
                 persisted[app.iterator_object] = np.full_like(bookmark, crash_iter)
-            outcome, extra, metric = self._classify_test(persisted, crash_iter, test)
-            out.append((
-                test.index,
-                CrashRecord(
-                    iter_idx=crash_iter,
-                    region_idx=region_idx,
-                    frac=float(frac),
-                    inconsistency=inconsistency,
-                    outcome=outcome,
-                    extra_iters=extra,
-                    verify_metric=metric,
+            items.append({
+                "test": test,
+                "region_idx": region_idx,
+                "frac": float(frac),
+                "inconsistency": inconsistency,
+                "persisted": persisted,
+            })
+        return items
+
+    def _classify_items(
+        self, items: Sequence[dict], crash_iter: int
+    ) -> List[Tuple[str, int, float]]:
+        """Classify prepared test items; batches eligible lanes on ``vec``."""
+        results: List[Optional[Tuple[str, int, float]]] = [None] * len(items)
+        lanes: List[Tuple[int, dict]] = []
+        batchable = self.engine == "vec" and self.app.supports_batched_step
+        for i, item in enumerate(items):
+            test = item["test"]
+            recovery = self.fault.recovery_plan(test, crash_iter, self._golden_iters)
+            if recovery is not None:
+                # recovery-from-recovery simulates a fresh window on the live
+                # trajectory: inherently per-lane, never batched
+                results[i] = self._restart_with_recovery_crash(
+                    item["persisted"], crash_iter, test, recovery
+                )
+            elif batchable:
+                lanes.append((i, item))
+            else:
+                results[i] = self._restart_and_classify(item["persisted"], crash_iter)
+        if lanes:
+            for (i, _), outcome in zip(
+                lanes,
+                self._classify_lanes_batched(
+                    [(item["persisted"], crash_iter) for _, item in lanes]
                 ),
-            ))
-        return out
+            ):
+                results[i] = outcome
+        return results  # type: ignore[return-value]
+
+    def _record_for(
+        self, crash_iter: int, item: dict, outcome: Tuple[str, int, float]
+    ) -> Tuple[int, CrashRecord]:
+        kind, extra, metric = outcome
+        return (
+            item["test"].index,
+            CrashRecord(
+                iter_idx=crash_iter,
+                region_idx=item["region_idx"],
+                frac=item["frac"],
+                inconsistency=item["inconsistency"],
+                outcome=kind,
+                extra_iters=extra,
+                verify_metric=metric,
+            ),
+        )
+
+    # ------------------------------------------------- batched lane recompute
+    class _Lane:
+        __slots__ = ("index", "state", "it", "extra", "phase", "last_metric")
+
+        def __init__(self, index: int, state: State, it: int):
+            self.index = index
+            self.state = state
+            self.it = it
+            self.extra = 0
+            # "A": run_to_completion; "B0": awaiting entry verify;
+            # "B": extra iterations; "done": classified
+            self.phase = "A"
+            self.last_metric = float("nan")
+
+    @staticmethod
+    def _call_padded(fn, states: List[State], *extra_lists):
+        """Call an app ``*_batch`` hook with the lane list padded to the next
+        power-of-two length.  Stacked hooks jit-compile per batch shape; as
+        lanes finish, an unpadded batch would shrink by ones and recompile
+        every round.  Padding replicates lane 0 (every hook is lane-
+        independent, so the real lanes' outputs are untouched) and the
+        padded tail of the result is dropped."""
+        n = len(states)
+        b = 1
+        while b < n:
+            b <<= 1
+        if b == n:
+            return fn(states, *extra_lists)
+        pad = b - n
+        padded = list(states) + [states[0]] * pad
+        pextra = [list(e) + [e[0]] * pad for e in extra_lists]
+        return fn(padded, *pextra)[:n]
+
+    def _step_lanes(self, lanes: List["CrashTester._Lane"]) -> List["CrashTester._Lane"]:
+        """One batched iteration for every lane; on a batch-level failure,
+        falls back to per-lane serial steps and returns the lanes whose
+        serial step raised (their exception is theirs alone)."""
+        app = self.app
+        try:
+            new_states = self._call_padded(
+                app.run_iteration_batch, [l.state for l in lanes]
+            )
+        except Exception as e:  # noqa: BLE001 - attribute the failure per lane
+            import warnings
+
+            warnings.warn(
+                f"{app.name}: run_iteration_batch raised ({e!r}); falling "
+                f"back to per-lane serial steps — the vec engine is paying "
+                f"for a broken batched hook",
+                RuntimeWarning, stacklevel=2,
+            )
+            failed = []
+            for l in lanes:
+                try:
+                    l.state = app.run_iteration(l.state)
+                except Exception:  # noqa: BLE001
+                    failed.append(l)
+            return failed
+        for l, s in zip(lanes, new_states):
+            l.state = s
+        return []
+
+    def _classify_lanes_batched(
+        self, lanes: Sequence[Tuple[Mapping[str, np.ndarray], int]]
+    ) -> List[Tuple[str, int, float]]:
+        """Stacked-lane replica of :meth:`_restart_and_classify`.
+
+        All lanes advance together through ``run_iteration_batch`` — one
+        dispatch per step for the whole batch instead of one per region per
+        test — while per-lane masks replicate the serial control flow
+        exactly: the run-to-completion loop with its converged() early exit
+        (phase A), the acceptance verify (B0), and the extra-iteration loop
+        up to the recompute budget (phase B).  Any per-lane exception — in
+        restart, a blown-up convergence check, a verify — classifies that
+        lane S3 with the serial path's (0, nan) payload.  Lanes may enter
+        with different restart iterations (cross-window batches do).
+        """
+        app = self.app
+        budget = int(self.max_extra_factor * self._golden_iters)
+        golden_iters = self._golden_iters
+        out: List[Optional[Tuple[str, int, float]]] = [None] * len(lanes)
+        live: List[CrashTester._Lane] = []
+        for i, (persisted, restart_iter) in enumerate(lanes):
+            try:
+                state = app.restart_init(self.seed, persisted)
+            except Exception:  # noqa: BLE001 - serial path: any failure is S3
+                out[i] = ("S3", 0, float("nan"))
+                continue
+            lane = CrashTester._Lane(i, state, restart_iter)
+            if lane.it >= golden_iters:
+                lane.phase = "B0"  # run_to_completion would execute nothing
+            live.append(lane)
+
+        active = live
+        while active:
+            # entry verifies for lanes that just finished the run phase
+            b0 = [l for l in active if l.phase == "B0"]
+            if b0:
+                for l, res in zip(b0, self._call_padded(app.verify_batch, [l.state for l in b0])):
+                    if isinstance(res, BaseException):
+                        out[l.index] = ("S3", 0, float("nan"))
+                        l.phase = "done"
+                    elif res.passed:
+                        out[l.index] = ("S1", 0, res.metric)
+                        l.phase = "done"
+                    elif l.it >= budget:
+                        out[l.index] = ("S4", 0, res.metric)
+                        l.phase = "done"
+                    else:
+                        l.phase = "B"
+            active = [l for l in active if l.phase != "done"]
+            if not active:
+                break
+
+            # one batched step for every still-running lane, A and B alike
+            for l in self._step_lanes(active):
+                out[l.index] = ("S3", 0, float("nan"))
+                l.phase = "done"
+            active = [l for l in active if l.phase != "done"]
+
+            a_lanes = [l for l in active if l.phase == "A"]
+            for l in a_lanes:
+                l.it += 1
+            if a_lanes:
+                convs = self._call_padded(
+                    app.converged_batch,
+                    [l.state for l in a_lanes], [l.it for l in a_lanes],
+                )
+                for l, c in zip(a_lanes, convs):
+                    if isinstance(c, BaseException):
+                        out[l.index] = ("S3", 0, float("nan"))
+                        l.phase = "done"
+                    elif c or l.it >= golden_iters:
+                        l.phase = "B0"
+
+            b_lanes = [l for l in active if l.phase == "B"]
+            for l in b_lanes:
+                l.it += 1
+                l.extra += 1
+            if b_lanes:
+                for l, res in zip(
+                    b_lanes,
+                    self._call_padded(app.verify_batch, [l.state for l in b_lanes]),
+                ):
+                    if isinstance(res, BaseException):
+                        out[l.index] = ("S3", 0, float("nan"))
+                        l.phase = "done"
+                    elif res.passed:
+                        out[l.index] = ("S2", l.extra, res.metric)
+                        l.phase = "done"
+                    elif l.it >= budget:
+                        out[l.index] = ("S4", l.extra, res.metric)
+                        l.phase = "done"
+            active = [l for l in active if l.phase != "done"]
+        return out  # type: ignore[return-value]
 
     def _chronic_base(self, candidates, crash_iter: int) -> Dict[str, np.ndarray]:
         """Steady-state base values for chronically-cached blocks: the last
@@ -561,6 +866,8 @@ class CrashTester:
         seed), whose crash records must never be mixed in one store."""
         import hashlib
 
+        if self._digest is not None:
+            return self._digest
         self._ensure_golden()
         h = hashlib.sha256()
         for name in sorted(self._golden_states[0]):
@@ -569,7 +876,8 @@ class CrashTester:
             h.update(str(arr.dtype).encode())
             h.update(str(arr.shape).encode())
             h.update(arr.tobytes())
-        return h.hexdigest()[:16]
+        self._digest = h.hexdigest()[:16]
+        return self._digest
 
     def _fingerprint(self, n_tests: int, seed: int) -> Dict[str, object]:
         """Identity of a campaign for the resume store: any change here means
@@ -615,6 +923,79 @@ class CrashTester:
         """Plan a campaign and group it into shards (one per crash window)."""
         tests = self.plan_campaign(n_tests, seed)
         return tests, self._shards(tests)
+
+    def run_shards(
+        self,
+        shards: Mapping[int, Sequence[PlannedTest]],
+        on_shard=None,
+    ) -> Dict[int, List[Tuple[int, CrashRecord]]]:
+        """Execute several shards in-process, batching lanes **across**
+        windows.
+
+        CI-sized campaigns put only one or two tests in each crash window, so
+        batching inside a single shard barely amortizes anything.  Here the
+        vec engine groups consecutive shards into chunks of up to
+        ``REPRO_LANE_BATCH`` lanes (restart states of one app all share
+        shapes), resolves each window's images, then classifies the whole
+        chunk through :meth:`_classify_lanes_batched`.  ``on_shard(ci,
+        records)`` fires as each shard's records are assembled — after its
+        chunk completes, which is also the durability granularity when the
+        caller appends to a campaign store.  Results are identical to
+        calling :meth:`run_window_tests` per shard, in any order.
+        """
+        use_batch = self.engine == "vec" and self.app.supports_batched_step
+        out: Dict[int, List[Tuple[int, CrashRecord]]] = {}
+        if not use_batch:
+            for ci, ts in shards.items():
+                recs = self.run_window_tests(ci, ts)
+                out[ci] = recs
+                if on_shard is not None:
+                    on_shard(ci, recs)
+            return out
+
+        target = _lane_batch_target()
+        chunk: List[Tuple[int, Sequence[PlannedTest]]] = []
+        lanes_in_chunk = 0
+        for ci, ts in shards.items():
+            chunk.append((ci, ts))
+            lanes_in_chunk += len(ts)
+            if lanes_in_chunk >= target:
+                self._run_shard_chunk(chunk, out, on_shard)
+                chunk, lanes_in_chunk = [], 0
+        if chunk:
+            self._run_shard_chunk(chunk, out, on_shard)
+        return out
+
+    def _run_shard_chunk(self, chunk, out, on_shard) -> None:
+        """Prepare every shard of the chunk, classify all lanes at once."""
+        prepared = [(ci, ts, self._prepare_window_items(ci, ts)) for ci, ts in chunk]
+        results: Dict[int, List[Tuple[str, int, float]]] = {}
+        batch_lanes: List[Tuple[int, int, dict]] = []  # (ci, item_idx, item)
+        for ci, ts, items in prepared:
+            results[ci] = [None] * len(items)  # type: ignore[list-item]
+            for j, item in enumerate(items):
+                test = item["test"]
+                recovery = self.fault.recovery_plan(test, ci, self._golden_iters)
+                if recovery is not None:
+                    results[ci][j] = self._restart_with_recovery_crash(
+                        item["persisted"], ci, test, recovery
+                    )
+                else:
+                    batch_lanes.append((ci, j, item))
+        if batch_lanes:
+            outcomes = self._classify_lanes_batched(
+                [(item["persisted"], ci) for ci, _, item in batch_lanes]
+            )
+            for (ci, j, _), outcome in zip(batch_lanes, outcomes):
+                results[ci][j] = outcome
+        for ci, ts, items in prepared:
+            recs = [
+                self._record_for(ci, item, outcome)
+                for item, outcome in zip(items, results[ci])
+            ]
+            out[ci] = recs
+            if on_shard is not None:
+                on_shard(ci, recs)
 
     def payload_picklable(self) -> Tuple[bool, Optional[BaseException]]:
         """Whether this tester's campaign payload can cross a process
@@ -711,16 +1092,18 @@ class CrashTester:
                 )
                 n_workers = 1
         if n_workers <= 1 or len(pending) <= 1:
-            for ci, ts in pending.items():
-                recs = self.run_window_tests(ci, ts)
-                if store is not None:
-                    store.append_shard(ci, recs)
-                results[ci] = recs
+            # in-process: lanes batch across windows (run_shards); completed
+            # shards land in the store as their chunk finishes
+            on_shard = None
+            if store is not None:
+                on_shard = store.append_shard
+            results.update(self.run_shards(pending, on_shard=on_shard))
         else:
             with campaign_executor(
                 n_workers=min(n_workers, len(pending)),
                 app=self.app, cache=self.cache,
                 max_extra_factor=self.max_extra_factor, fault=self.fault,
+                engine=self.engine,
             ) as ex:
                 futs = {
                     ex.submit(_shard_worker_run, "", self.plan, self.seed, ci, ts): ci
@@ -742,7 +1125,9 @@ class CrashTester:
 # campaign run uses one key; the workflow orchestrator multiplexes all of a
 # workflow's campaigns over the same pool, so a worker pays each campaign's
 # golden run once and then amortises it across every shard it executes.
-_WORKER_HOST: Optional[Tuple[IterativeApp, CacheConfig, float, Optional[FaultModel]]] = None
+_WORKER_HOST: Optional[
+    Tuple[IterativeApp, CacheConfig, float, Optional[FaultModel], Optional[str]]
+] = None
 _WORKER_TESTERS: "OrderedDict[str, Tuple[PersistPlan, int, CrashTester]]" = None  # type: ignore[assignment]
 #: LRU bound on coexisting per-campaign testers in one worker: each pins a
 #: full golden trajectory, so an unbounded cache would multiply resident
@@ -757,11 +1142,12 @@ def _shard_worker_init(
     cache: CacheConfig,
     max_extra_factor: float,
     fault: Optional[FaultModel] = None,
+    engine: Optional[str] = None,
 ) -> None:
     global _WORKER_HOST, _WORKER_TESTERS
     from collections import OrderedDict
 
-    _WORKER_HOST = (app, cache, max_extra_factor, fault)
+    _WORKER_HOST = (app, cache, max_extra_factor, fault, engine)
     _WORKER_TESTERS = OrderedDict()
 
 
@@ -779,10 +1165,10 @@ def _shard_worker_run(
     if cached is not None and (cached[0], cached[1]) == (plan, seed):
         tester = cached[2]
     else:
-        app, cache, max_extra_factor, fault = _WORKER_HOST
+        app, cache, max_extra_factor, fault, engine = _WORKER_HOST
         tester = CrashTester(
             app, plan, cache, seed=seed,
-            max_extra_factor=max_extra_factor, fault=fault,
+            max_extra_factor=max_extra_factor, fault=fault, engine=engine,
         )
         _WORKER_TESTERS[campaign_key] = (plan, seed, tester)
         while len(_WORKER_TESTERS) > _WORKER_TESTER_CAP:
@@ -797,6 +1183,7 @@ def campaign_executor(
     cache: CacheConfig,
     max_extra_factor: float = 2.0,
     fault: Optional[FaultModel] = None,
+    engine: Optional[str] = None,
 ) -> ProcessPoolExecutor:
     """A shard worker pool bound to one (app, cache, fault) payload.
 
@@ -812,5 +1199,5 @@ def campaign_executor(
         max_workers=n_workers,
         mp_context=ctx,
         initializer=_shard_worker_init,
-        initargs=(app, cache, max_extra_factor, fault),
+        initargs=(app, cache, max_extra_factor, fault, engine),
     )

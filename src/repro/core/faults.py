@@ -176,19 +176,26 @@ class TornWrite(FaultModel):
     depth: int = 8
 
     def torn_blocks(self, test, trace, block_bytes):
-        rng = _test_rng(test, _SALT_TEAR)
+        # Sweeps are time-disjoint and ordered, so at most one — the last
+        # with t_start < crash_t — can be in flight; find it with one binary
+        # search over the trace's SoA sweep arrays instead of a Python scan.
+        # Only in-flight sweeps ever consumed tearing entropy, so the rng
+        # stream is bit-for-bit the historical per-sweep loop's.
         ct = int(test.crash_t)
+        t_starts, _ = trace.sweep_soa()
+        idx = int(np.searchsorted(t_starts, ct, side="left")) - 1
+        if idx < 0:
+            return None
+        sw = trace.sweeps[idx]
+        done = ct - sw.t_start
+        if done >= sw.n_blocks:
+            return None  # sweep completed before the crash: stores drained
+        rng = _test_rng(test, _SALT_TEAR)
         out: List[TornBlock] = []
-        for sw in trace.sweeps:
-            if sw.t_start >= ct:
-                break
-            done = ct - sw.t_start
-            if done >= sw.n_blocks:
-                continue  # sweep completed before the crash: stores drained
-            for blk in range(max(0, done - self.depth), done):
-                if rng.random() < self.p_torn:
-                    cut = int(rng.integers(1, block_bytes))
-                    out.append(TornBlock(sw.obj, blk, cut, sw.seq))
+        for blk in range(max(0, done - self.depth), done):
+            if rng.random() < self.p_torn:
+                cut = int(rng.integers(1, block_bytes))
+                out.append(TornBlock(sw.obj, blk, cut, sw.seq))
         return out or None
 
 

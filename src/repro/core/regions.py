@@ -15,7 +15,7 @@ for critical-object selection (§5.1); everything else is rebuilt by
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -59,6 +59,12 @@ class IterativeApp:
     #: sweep).  Apps whose structure makes a failure mode unusually punishing
     #: (or trivial) tune the model here instead of at every call site.
     fault_defaults: Mapping[str, Mapping[str, object]] = {}
+    #: opt-in for the vectorized campaign engine: the crash tester may stack
+    #: this app's restart lanes and advance them through the ``*_batch``
+    #: hooks below.  An app must only set this when its batched hooks are
+    #: **bitwise identical** per lane to the serial ones (vmapped elementwise
+    #: jax ops are; batched matmuls generally are not — use ``lax.map``).
+    supports_batched_step: bool = False
 
     def regions(self) -> Tuple[Region, ...]:
         raise NotImplementedError
@@ -112,6 +118,41 @@ class IterativeApp:
     def converged(self, state: State, it: int) -> bool:
         """Early termination hook: by default run the fixed iteration count."""
         return it >= self.n_iters
+
+    # ------------------------------------------------------- batched recompute
+    # The vectorized campaign engine advances many independent restart lanes
+    # at once.  The default implementations loop the serial hooks (always
+    # correct); apps that set ``supports_batched_step`` override them with
+    # stacked array ops so a whole lane batch costs one dispatch.  Contract
+    # for every override: lane i's result is bitwise identical to the serial
+    # hook on lane i alone, and exceptions are captured per lane (a blown-up
+    # lane classifies as S3 without tearing down its batch-mates).
+
+    def run_iteration_batch(self, states: Sequence[State]) -> "List[State]":
+        """Advance each state one main-loop iteration; pure per lane."""
+        return [self.run_iteration(s) for s in states]
+
+    def converged_batch(self, states: Sequence[State], its: Sequence[int]) -> "List[object]":
+        """Element i is ``converged(states[i], its[i])`` — a bool, or the
+        exception instance the serial hook would have raised (blow-ups)."""
+        out: "List[object]" = []
+        for s, it in zip(states, its):
+            try:
+                out.append(bool(self.converged(s, it)))
+            except Exception as e:  # noqa: BLE001 - captured per lane
+                out.append(e)
+        return out
+
+    def verify_batch(self, states: Sequence[State]) -> "List[object]":
+        """Element i is ``verify(states[i])`` — a :class:`VerifyResult`, or
+        the exception instance the serial hook would have raised."""
+        out: "List[object]" = []
+        for s in states:
+            try:
+                out.append(self.verify(s))
+            except Exception as e:  # noqa: BLE001 - captured per lane
+                out.append(e)
+        return out
 
     def run_golden(self, seed: int = 0) -> Tuple[State, int]:
         state = self.init(seed)

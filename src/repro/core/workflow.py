@@ -74,10 +74,11 @@ class _PerCampaignRunner:
     """The historical scheduler: each campaign runs to completion on its own
     pool (``CrashTester.run_campaign``), strictly in submission order."""
 
-    def __init__(self, app, cache, fault, n_workers, max_extra_factor=2.0):
+    def __init__(self, app, cache, fault, n_workers, max_extra_factor=2.0, engine=None):
         self.app, self.cache, self.fault = app, cache, fault
         self.n_workers = n_workers
         self.max_extra_factor = max_extra_factor
+        self.engine = engine
 
     def run(self, specs: Sequence[CampaignSpec]) -> Dict[str, CampaignResult]:
         out: Dict[str, CampaignResult] = {}
@@ -85,6 +86,7 @@ class _PerCampaignRunner:
             out[s.key] = CrashTester(
                 self.app, s.plan, self.cache, seed=s.seed,
                 max_extra_factor=self.max_extra_factor, fault=self.fault,
+                engine=self.engine,
             ).run_campaign(s.n_tests, n_workers=self.n_workers)
         return out
 
@@ -118,12 +120,14 @@ class WorkflowOrchestrator:
         store=None,
         shard_callback: Optional[Callable[[str, int], None]] = None,
         max_extra_factor: float = 2.0,
+        engine: Optional[str] = None,
     ):
         self.app, self.cache, self.fault = app, cache, fault
         self.n_workers = n_workers
         self.store = store
         self.shard_callback = shard_callback
         self.max_extra_factor = max_extra_factor
+        self.engine = engine
         self._testers: Dict[str, Tuple[CampaignSpec, CrashTester]] = {}
         self._ex = None
         self._pickle_checked = False
@@ -149,6 +153,7 @@ class WorkflowOrchestrator:
         t = CrashTester(
             self.app, spec.plan, self.cache, seed=spec.seed,
             max_extra_factor=self.max_extra_factor, fault=self.fault,
+            engine=self.engine,
         )
         self._testers[spec.key] = (spec, t)
         return t
@@ -158,6 +163,7 @@ class WorkflowOrchestrator:
             self._ex = campaign_executor(
                 n_workers=self.n_workers, app=self.app, cache=self.cache,
                 max_extra_factor=self.max_extra_factor, fault=self.fault,
+                engine=self.engine,
             )
         return self._ex
 
@@ -218,9 +224,17 @@ class WorkflowOrchestrator:
                 key, ci, recs = fut.result()
                 self._land(key, ci, recs, results)
         else:
+            # in-process: hand each campaign's pending shards to run_shards,
+            # which batches recompute lanes across windows on the vec engine;
+            # _land fires per shard exactly as the per-shard loop did
+            by_spec: Dict[str, Tuple[CampaignSpec, Dict[int, List[PlannedTest]]]] = {}
             for spec, ci, ts in pending:
-                recs = self.tester(spec).run_window_tests(ci, ts)
-                self._land(spec.key, ci, recs, results)
+                by_spec.setdefault(spec.key, (spec, {}))[1][ci] = ts
+            for key, (spec, shard_map) in by_spec.items():
+                self.tester(spec).run_shards(
+                    shard_map,
+                    on_shard=lambda ci, recs, _k=key: self._land(_k, ci, recs, results),
+                )
 
         out = {
             key: self._testers[key][1].assemble_campaign(planned[key][0], results[key])
@@ -386,11 +400,20 @@ def run_workflow(
     scheduler: str = "shared",
     store_path: Optional[str] = None,
     shard_callback: Optional[Callable[[str, int], None]] = None,
+    engine: Optional[str] = None,
 ) -> WorkflowResult:
     """Steps 1–3.
 
     ``n_workers`` workers execute the workflow's crash-test shards; results
     are identical for every worker count.
+
+    ``engine`` selects the campaign hot path (``"vec"`` | ``"ref"``, see
+    :class:`~repro.core.crash_tester.CrashTester`); results are bit-for-bit
+    identical between engines.  The workflow's campaigns share simulated
+    crash windows through the process-wide
+    :class:`~repro.core.trace_cache.WindowTraceCache` — the baseline and
+    per-region campaigns reuse each other's window payloads, and replaying
+    the same plan (robustness matrix, artifact replay) reuses whole traces.
 
     ``scheduler`` selects how the workflow's W+2 campaigns are executed:
 
@@ -433,12 +456,12 @@ def run_workflow(
     tau = tau_threshold(system, t_s=t_s)
 
     if scheduler == "serial":
-        runner = _PerCampaignRunner(app, cache, fault_model, n_workers)
+        runner = _PerCampaignRunner(app, cache, fault_model, n_workers, engine=engine)
     else:
         store = None
         runner = WorkflowOrchestrator(
             app, cache, fault_model, n_workers,
-            shard_callback=shard_callback,
+            shard_callback=shard_callback, engine=engine,
         )
         if store_path is not None:
             from .campaign_store import WorkflowStore

@@ -38,6 +38,24 @@ def _damped(y: jnp.ndarray, rank: jnp.ndarray, damping: float) -> Tuple[jnp.ndar
     return new, jnp.sum(jnp.abs(new - rank))
 
 
+# Batched lane hooks for the vectorized campaign engine.  The spmv is a
+# matmul whose vmap would become a matrix-matrix product with a *different*
+# reduction tiling (not bitwise the serial matvec), so lanes go through
+# ``lax.map`` — one dispatch, per-lane HLO identical to ``_spmv``.  The
+# damped update is elementwise apart from a per-lane reduction of unchanged
+# shape, where vmap is bitwise-safe (asserted by tests/test_campaign_vec.py).
+@jax.jit
+def _spmv_batch(links: jnp.ndarray, rank_batch: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.map(lambda r: links @ r, rank_batch)
+
+
+@jax.jit
+def _damped_batch(
+    y_batch: jnp.ndarray, rank_batch: jnp.ndarray, damping: float
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return jax.vmap(lambda y, r: _damped(y, r, damping))(y_batch, rank_batch)
+
+
 class PageRankApp(IterativeApp):
     name = "pagerank"
     candidates = ("rank", "y", "k")
@@ -121,3 +139,41 @@ class PageRankApp(IterativeApp):
         # delta is ||G(rank_prev) - rank_prev||_1's damped successor; the
         # true fixed-point residual is only asserted by verify()
         return 0 < delta < self.tol * 0.5
+
+    # ------------------------------------------------------- batched recompute
+    # ``links`` is read-only and never a selection candidate, so every
+    # restart lane carries the identical init-rebuilt matrix — the batched
+    # hooks stack only the per-lane vectors and close over lane 0's links.
+    supports_batched_step = True
+
+    def run_iteration_batch(self, states):
+        rank_rows = np.stack([s["rank"] for s in states])
+        links = jnp.asarray(states[0]["links"])
+        y_rows = np.asarray(_spmv_batch(links, jnp.asarray(rank_rows)))
+        new_rows, deltas = _damped_batch(
+            jnp.asarray(y_rows), jnp.asarray(rank_rows), self.damping
+        )
+        new_rows = np.asarray(new_rows)
+        deltas = np.asarray(deltas)
+        out = []
+        for i, s in enumerate(states):
+            s = dict(s)
+            s["y"] = y_rows[i]
+            s["rank"] = new_rows[i]
+            s["delta"] = np.asarray(deltas[i]).reshape(1).astype(np.float32)
+            s["k"] = s["k"] + 1
+            out.append(s)
+        return out
+
+    # converged() only reads the scalar delta — the looping default is fine
+
+    def verify_batch(self, states):
+        rank_rows = np.stack([s["rank"] for s in states])
+        links = jnp.asarray(states[0]["links"])
+        y_rows = np.asarray(_spmv_batch(links, jnp.asarray(rank_rows)))
+        out = []
+        for i in range(len(states)):
+            target = self.damping * y_rows[i] + (1.0 - self.damping) / self.n_nodes
+            r = float(np.abs(target - rank_rows[i]).sum())
+            out.append(VerifyResult(bool(np.isfinite(r) and r < self.tol), r))
+        return out

@@ -53,6 +53,22 @@ def _rb_sor(u_flat: jnp.ndarray, b_flat: jnp.ndarray, g: int, omega: float,
     return jax.lax.fori_loop(0, pairs, body, u).reshape(-1)
 
 
+# Batched lane hooks for the vectorized campaign engine.  The SOR update and
+# the Laplacian are pure elementwise/stencil chains, so vmapping them is
+# bitwise identical per lane to the serial kernels (no cross-lane reductions
+# are introduced) — asserted by tests/test_campaign_vec.py.
+@partial(jax.jit, static_argnames=("g",))
+def _lap_batch(u_batch: jnp.ndarray, g: int) -> jnp.ndarray:
+    return jax.vmap(lambda u: laplacian_apply(u, g))(u_batch)
+
+
+@partial(jax.jit, static_argnames=("g", "pairs"))
+def _rb_sor_batch(
+    u_batch: jnp.ndarray, b_batch: jnp.ndarray, g: int, omega: float, pairs: int
+) -> jnp.ndarray:
+    return jax.vmap(lambda u, b: _rb_sor(u, b, g, omega, pairs))(u_batch, b_batch)
+
+
 class SORApp(IterativeApp):
     name = "sor"
     candidates = ("u", "res", "k")
@@ -134,3 +150,60 @@ class SORApp(IterativeApp):
         # back most of the lost progress to pass acceptance, which is what
         # spreads SOR crashes across S1/S2 instead of trivially recomputing
         return r < self.tol * 0.95
+
+    # ------------------------------------------------------- batched recompute
+    supports_batched_step = True
+
+    def _residuals_batch(self, states) -> list:
+        """rel_residual per lane with one batched Laplacian dispatch; the
+        norms run in NumPy per contiguous row, exactly like the serial path."""
+        u_rows = np.stack([s["u"] for s in states])
+        b_rows = np.stack([s["b"] for s in states])
+        lap = np.asarray(_lap_batch(jnp.asarray(u_rows), self.grid))
+        out = []
+        for i in range(len(states)):
+            r = b_rows[i] - lap[i]
+            nb = float(np.linalg.norm(b_rows[i]))
+            out.append(float(np.linalg.norm(r)) / max(nb, 1e-30))
+        return out
+
+    def run_iteration_batch(self, states):
+        u_rows = np.stack([s["u"] for s in states])
+        b_rows = np.stack([s["b"] for s in states])
+        # region order preserved: the residual diagnostic reads the pre-sweep u
+        lap = np.asarray(_lap_batch(jnp.asarray(u_rows), self.grid))
+        u_new = np.asarray(_rb_sor_batch(
+            jnp.asarray(u_rows), jnp.asarray(b_rows), self.grid,
+            self.omega, self.pairs_per_iter,
+        ))
+        out = []
+        for i, s in enumerate(states):
+            s = dict(s)
+            s["res"] = b_rows[i] - lap[i]
+            s["u"] = u_new[i]
+            s["k"] = s["k"] + 1
+            out.append(s)
+        return out
+
+    def converged_batch(self, states, its):
+        out: list = [None] * len(states)
+        need = []
+        for i, it in enumerate(its):
+            if it >= self.n_iters:
+                out[i] = True  # serial converged() returns before the residual
+            else:
+                need.append(i)
+        if need:
+            rs = self._residuals_batch([states[i] for i in need])
+            for i, r in zip(need, rs):
+                if not np.isfinite(r):
+                    out[i] = FloatingPointError("SOR blow-up")
+                else:
+                    out[i] = bool(r < self.tol * 0.95)
+        return out
+
+    def verify_batch(self, states):
+        return [
+            VerifyResult(bool(np.isfinite(r) and r < self.tol), r)
+            for r in self._residuals_batch(states)
+        ]

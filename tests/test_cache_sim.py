@@ -364,3 +364,13 @@ def test_lru_capacity_and_dirty_invariants(capacity, ops):
         assert all_dirty <= resident
         assert all_dirty == set(dirty), f"op {i}"
         assert list(lru._lines) == order
+        # the per-object dirty index must equal a full-cache scan, in the
+        # cache's recency order — flush emission order depends on it
+        for obj in {k[0] for k in lru._lines} | set(lru._dirty):
+            scan = [
+                (blk, seq) for (o, blk), seq in lru._lines.items()
+                if o == obj and seq >= 0
+            ]
+            assert lru.dirty_lines_of(obj) == scan, f"op {i} obj {obj}"
+            mask = lru.dirty_resident_mask(obj, 16)
+            assert set(np.flatnonzero(mask)) == {blk for blk, _ in scan}

@@ -26,12 +26,13 @@ GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "campaign_golden
 GOLDEN_CONFIG = {"n_tests": 8, "seed": 123, "plan": "none"}
 
 
-def _run_campaign(name, fault_name=None):
+def _run_campaign(name, fault_name=None, engine=None):
     app = ci_app(name)
     cache = default_cache(app)
     fault = get_fault_model(fault_name, app=app) if fault_name else None
     camp = CrashTester(
-        app, PersistPlan.none(), cache, seed=GOLDEN_CONFIG["seed"], fault=fault
+        app, PersistPlan.none(), cache, seed=GOLDEN_CONFIG["seed"], fault=fault,
+        engine=engine,
     ).run_campaign(GOLDEN_CONFIG["n_tests"])
     return camp, fault
 
@@ -58,8 +59,8 @@ def _profile_entry(camp, fault=None):
     return profile_to_payload(RecomputeProfile.from_campaign(camp, fault=fault))
 
 
-def _golden_campaign(name, fault_name=None):
-    camp, _ = _run_campaign(name, fault_name)
+def _golden_campaign(name, fault_name=None, engine=None):
+    camp, _ = _run_campaign(name, fault_name, engine=engine)
     return _campaign_entry(camp)
 
 
@@ -68,15 +69,26 @@ def _load_goldens():
         return json.load(f)
 
 
+def test_campaign_golden_smoke_per_engine():
+    """Fast-gate leg: one pinned app through the engine selected by
+    ``REPRO_ENGINE`` (CI runs it once per engine).  The slow suite covers
+    every app; this asserts the default-engine hot path never drifts from
+    the golden classification between scheduled runs."""
+    goldens = _load_goldens()
+    camp, _ = _run_campaign("sor")
+    assert _campaign_entry(camp) == goldens["apps"]["sor"]
+
+
 @pytest.mark.slow
+@pytest.mark.parametrize("engine", ["ref", "vec"])
 @pytest.mark.parametrize("name", sorted(CI_SIZES))
-def test_campaign_outcomes_match_golden(name):
+def test_campaign_outcomes_match_golden(name, engine):
     goldens = _load_goldens()
     assert goldens["config"] == GOLDEN_CONFIG, (
         "golden config drifted; regenerate tests/golden/campaign_goldens.json"
     )
     assert name in goldens["apps"], f"no golden pinned for {name}; --regen"
-    got = _golden_campaign(name)
+    got = _golden_campaign(name, engine=engine)
     want = goldens["apps"][name]
     assert got["golden_iters"] == want["golden_iters"], (
         f"{name}: golden run length changed"
@@ -85,7 +97,8 @@ def test_campaign_outcomes_match_golden(name):
         f"{name}: planned crash points changed (campaign RNG stream drifted)"
     )
     assert got["counts"] == want["counts"], (
-        f"{name}: outcome classification shifted: {got['counts']} != {want['counts']}"
+        f"{name}[{engine}]: outcome classification shifted: "
+        f"{got['counts']} != {want['counts']}"
     )
 
 
