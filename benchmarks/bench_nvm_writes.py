@@ -16,7 +16,7 @@ from .common import APPS, campaign_size, emit
 def run(fast: bool = True):
     from repro.core import CacheConfig, CrashTester, PersistPlan
     from repro.core.regions import object_blocks
-    from repro.core.workflow import run_workflow
+    from repro.core.workflow import WorkflowConfig, run_workflow
     from repro.hpc.suite import bench_app, ci_app, default_cache
 
     n = campaign_size(fast) // 2
@@ -24,7 +24,7 @@ def run(fast: bool = True):
     for name in APPS:
         app = ci_app(name) if fast else bench_app(name)
         cache = default_cache(app)
-        wf = run_workflow(app, n_tests=n, cache=cache, seed=0)
+        wf = run_workflow(app, WorkflowConfig(n_tests=n, cache=cache, seed=0))
 
         # baseline natural write-backs (no flushes at all)
         tester0 = CrashTester(app, PersistPlan.none(), cache, seed=3)

@@ -25,7 +25,7 @@ def _time_fn(fn, reps=5):
 
 def run(fast: bool = True):
     from repro.core import CacheConfig, NVMArena
-    from repro.core.workflow import run_workflow
+    from repro.core.workflow import WorkflowConfig, run_workflow
     from repro.hpc.suite import bench_app, ci_app, default_cache
 
     rows = []
@@ -33,7 +33,7 @@ def run(fast: bool = True):
     for name in APPS:
         app = ci_app(name) if fast else bench_app(name)
         cache = default_cache(app)
-        wf = run_workflow(app, n_tests=n, cache=cache, seed=0)
+        wf = run_workflow(app, WorkflowConfig(n_tests=n, cache=cache, seed=0))
         state = app.init(0)
         state = app.run_iteration(state)
 

@@ -31,7 +31,7 @@ from .common import APPS, RESULTS_DIR, Timer, campaign_size, campaign_workers, e
 
 def run(fast: bool = True):
     from repro.core import CrashTester, PersistPlan
-    from repro.core.workflow import run_workflow
+    from repro.core.workflow import WorkflowConfig, run_workflow
     from repro.hpc.suite import bench_app, ci_app, default_cache
 
     n = campaign_size(fast)
@@ -39,13 +39,18 @@ def run(fast: bool = True):
     rows = []
     agg_base_fail = 0.0
     agg_fixed = 0.0
-    for name in APPS:
+    # the HPC suite plus the ML workload the paper's §2.2 calls out
+    # (SGD/CNN training): reduced-transformer Adam training, selected from
+    # the same app registry and run through the same workflow
+    for name in APPS + ("lm-train",):
+        n_app = n if name in APPS else max(24, n // 2)
         with Timer() as t:
             app = ci_app(name) if fast else bench_app(name)
             cache = default_cache(app)
-            wf = run_workflow(app, n_tests=n, cache=cache, seed=0, n_workers=workers)
+            wf = run_workflow(app, WorkflowConfig(
+                n_tests=n_app, cache=cache, seed=0, n_workers=workers))
             validated = CrashTester(app, wf.plan, cache, seed=777).run_campaign(
-                n, n_workers=workers
+                n_app, n_workers=workers
             )
             best = wf.best_campaign
         base_fr = wf.baseline_campaign.class_fractions()
@@ -62,41 +67,13 @@ def run(fast: bool = True):
             "S4_base": round(base_fr["S4"], 3),
             "recomp_objects_only": round(
                 CrashTester(app, PersistPlan.at_loop_end(wf.critical, app), cache,
-                            seed=5).run_campaign(n, n_workers=workers).recomputability, 3),
+                            seed=5).run_campaign(n_app, n_workers=workers).recomputability, 3),
             "recomp_easycrash": round(val_fr["S1"], 3),
             "recomp_best": round(best.recomputability, 3),
             "critical_objects": "|".join(wf.critical),
             "plan_regions": "|".join(f"{k}:{x}" for k, x in sorted(wf.plan.region_freq.items())),
             "seconds": round(t.dt, 1),
         })
-    # the ML workload the paper's §2.2 calls out (CNN/SGD training):
-    # reduced-transformer Adam training as an EasyCrash app
-    try:
-        from repro.core.cache_sim import CacheConfig as CC
-        from repro.models.train_app import LMTrainApp
-
-        napp = 24 if fast else 60
-        app = LMTrainApp(n_iters=25, loss_band=1.02)
-        st = app.init(0)
-        ws = sum(v.nbytes // 64 for v in st.values())
-        cache = CC(capacity_blocks=int(ws * 0.45))
-        base = CrashTester(app, PersistPlan.none(), cache, seed=0).run_campaign(napp)
-        ec = CrashTester(app, PersistPlan.at_loop_end(("params",), app), cache,
-                         seed=0).run_campaign(napp)
-        bf = base.class_fractions()
-        rows.append({
-            "app": "lm-train",
-            "S1_base": round(bf["S1"], 3), "S2_base": round(bf["S2"], 3),
-            "S3_base": round(bf["S3"], 3), "S4_base": round(bf["S4"], 3),
-            "recomp_objects_only": round(ec.recomputability, 3),
-            "recomp_easycrash": round(ec.recomputability, 3),
-            "recomp_best": "",
-            "critical_objects": "params",
-            "plan_regions": "1:1",
-            "seconds": "",
-        })
-    except Exception as e:  # noqa: BLE001
-        print(f"[lm-train row skipped: {e}]")
     if agg_base_fail > 0:
         print(f"[headline] EasyCrash transforms {100 * agg_fixed / agg_base_fail:.0f}% "
               f"of failed crashes into correct recomputation "
@@ -155,7 +132,7 @@ def robustness_matrix(fast: bool = True):
     """
     from repro.core.faults import all_fault_models
     from repro.core.artifacts import load_plan, replay_plan, save_plan
-    from repro.core.workflow import run_workflow
+    from repro.core.workflow import WorkflowConfig, run_workflow
     from repro.hpc.suite import FAULT_SWEEP_APPS, bench_app, ci_app, default_cache
 
     n = max(16, campaign_size(fast) // 3)
@@ -169,10 +146,10 @@ def robustness_matrix(fast: bool = True):
         models = all_fault_models(app)
         paths = {}
         for a_name, fault_a in models.items():
-            wf = run_workflow(
-                app, n_tests=n, cache=cache, seed=0, region_measure="paper",
+            wf = run_workflow(app, WorkflowConfig(
+                n_tests=n, cache=cache, seed=0, region_measure="paper",
                 n_workers=workers, fault_model=fault_a,
-            )
+            ))
             p = os.path.join(plans_dir, f"{name}_{a_name}.json")
             save_plan(p, wf.plan, app_name=app.name, fault=fault_a,
                       cache=cache,

@@ -59,7 +59,7 @@ def measured_profile(name: str, fast: bool = True, n_tests: int | None = None):
     ``--full`` replaces it with the workflow's knapsack plan.
     """
     from repro.core import CrashTester, PersistPlan, RecomputeProfile
-    from repro.core.workflow import run_workflow
+    from repro.core.workflow import WorkflowConfig, run_workflow
     from repro.hpc.suite import bench_app, ci_app, default_cache
 
     key = (name, fast, n_tests)
@@ -70,9 +70,10 @@ def measured_profile(name: str, fast: bool = True, n_tests: int | None = None):
     if fast:
         plan = PersistPlan.at_loop_end(app.candidates, app)
     else:
-        wf = run_workflow(app, n_tests=campaign_size(fast), cache=cache,
-                          seed=SEED, region_measure="paper",
-                          n_workers=campaign_workers())
+        wf = run_workflow(app, WorkflowConfig(
+            n_tests=campaign_size(fast), cache=cache, seed=SEED,
+            region_measure="paper", n_workers=campaign_workers(),
+        ))
         plan = wf.plan
     camp = CrashTester(app, plan, cache, seed=SEED).run_campaign(
         n_tests or campaign_size(fast), n_workers=campaign_workers()

@@ -27,7 +27,7 @@ def _records(wf):
 
 
 def run(fast: bool = True):
-    from repro.core.workflow import run_workflow
+    from repro.core.workflow import WorkflowConfig, run_workflow
     from repro.hpc.suite import bench_app, ci_app, default_cache
 
     n = max(24, campaign_size(fast) // 2)
@@ -37,12 +37,12 @@ def run(fast: bool = True):
     for name in apps:
         app = ci_app(name) if fast else bench_app(name)
         cache = default_cache(app)
-        kw = dict(n_tests=n, cache=cache, seed=0, region_measure="isolated",
-                  n_workers=workers)
+        cfg = WorkflowConfig(n_tests=n, cache=cache, seed=0,
+                             region_measure="isolated", n_workers=workers)
         with Timer() as t_serial:
-            serial = run_workflow(app, scheduler="serial", **kw)
+            serial = run_workflow(app, cfg.replace(scheduler="serial"))
         with Timer() as t_shared:
-            shared = run_workflow(app, scheduler="shared", **kw)
+            shared = run_workflow(app, cfg.replace(scheduler="shared"))
         parity = (
             _records(serial) == _records(shared)
             and serial.summary() == shared.summary()

@@ -2,6 +2,8 @@
 
   bench_campaign_hotpath— ref-vs-vec campaign engine tests/sec + speedup
                           (writes the repo-root BENCH_campaign.json)
+  bench_model_campaign  — model-stack campaigns (lm-train, decode) + delta
+                          persist traffic (writes the repo-root BENCH_model.json)
   bench_recomputability — Fig 3 + Fig 6 (fault-model sweep, robustness matrix)
   bench_selection       — Fig 4a/4b + Fig 5
   bench_persist_overhead— Table 4
@@ -64,6 +66,7 @@ def main() -> None:
         bench_campaign_hotpath,
         bench_efficiency,
         bench_kernels,
+        bench_model_campaign,
         bench_nvm_writes,
         bench_persist_overhead,
         bench_recomputability,
@@ -75,6 +78,7 @@ def main() -> None:
 
     benches = [
         ("campaign_hotpath", bench_campaign_hotpath.run),
+        ("model_campaign", bench_model_campaign.run),
         ("recomputability", bench_recomputability.run),
         ("fault_sweep", bench_recomputability.fault_sweep),
         ("robustness_matrix", bench_recomputability.robustness_matrix),

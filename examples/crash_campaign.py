@@ -1,7 +1,10 @@
-"""Crash campaign on LM *training* (the paper's technique applied to the
-architecture zoo): characterize recomputability of Adam-trained transformer
-state, select critical data objects, and show that parameters are critical
-while optimizer moments re-warm.
+"""Crash campaign on any registered app — by default LM *training* (the
+paper's technique applied to the architecture zoo): characterize
+recomputability, select critical data objects, and show what must persist.
+
+Apps come from the suite registry (``repro.hpc.suite.get_app``): the seven
+HPC kernels plus the model stack (``lm-train``, ``decode``) share one
+namespace, one campaign machinery, and one CLI.
 
 Campaigns fan out over processes with ``--workers N`` and checkpoint shard
 results to a JSONL store with ``--store PATH``: kill the campaign mid-run,
@@ -14,7 +17,8 @@ bit-flip injects silent corruption, correlated-region concentrates failures
 in the heaviest code region.  The store fingerprint includes the model, so a
 resumed store refuses a different one.
 
-Usage:  PYTHONPATH=src python examples/crash_campaign.py [--arch rwkv6-3b]
+Usage:  PYTHONPATH=src python examples/crash_campaign.py [--app lm-train]
+                                                         [--arch rwkv6-3b]
                                                          [--workers 4]
                                                          [--store camp.jsonl]
                                                          [--fault-model torn-write]
@@ -31,15 +35,18 @@ from repro.configs import get_arch
 from repro.core import ENGINES, CacheConfig, CrashTester, PersistPlan
 from repro.core.faults import FAULT_MODELS, get_fault_model
 from repro.core.selection import select_objects
-from repro.models.train_app import LMTrainApp
+from repro.hpc.suite import CI_SIZES, get_app
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--app", default="lm-train", choices=sorted(CI_SIZES),
+                    help="registered app name (HPC suite + model stack)")
+    ap.add_argument("--arch", default="stablelm-1.6b",
+                    help="base architecture for the model apps "
+                         "(lm-train / decode); ignored by the HPC kernels")
     ap.add_argument("--tests", type=int, default=30)
     ap.add_argument("--iters", type=int, default=30)
-    ap.add_argument("--loss-band", type=float, default=1.01)
     ap.add_argument("--workers", type=int, default=1,
                     help="campaign shards fan out over this many processes")
     ap.add_argument("--store", default=None, metavar="PATH",
@@ -56,13 +63,15 @@ def main() -> None:
                          "identical")
     args = ap.parse_args()
 
-    app = LMTrainApp(base=get_arch(args.arch), n_iters=args.iters,
-                     loss_band=args.loss_band)
+    kw = dict(CI_SIZES[args.app], n_iters=args.iters)
+    if args.app in ("lm-train", "decode"):
+        kw["base"] = get_arch(args.arch)
+    app = get_app(args.app, **kw)
     fault = get_fault_model(args.fault_model, app=app)
     state = app.init(0)
     ws_blocks = sum(v.nbytes // 64 for v in state.values())
-    cache = CacheConfig(capacity_blocks=int(ws_blocks * 0.5))
-    print(f"arch={args.arch} (reduced) params={state['params'].size:,} floats; "
+    cache = CacheConfig(capacity_blocks=max(8, int(ws_blocks * 0.5)))
+    print(f"app={args.app} candidates={app.candidates}; "
           f"cache={cache.capacity_blocks} blocks of {ws_blocks}; "
           f"fault model: {fault.spec()}")
 
@@ -71,23 +80,29 @@ def main() -> None:
     ).run_campaign(args.tests, n_workers=args.workers, store_path=args.store)
     print(f"\nbaseline (no persistence): {base.class_fractions()}")
     print("per-object inconsistency -> recompute correlation (paper §5.1):")
-    for s in select_objects(base, [c for c in app.candidates if c != "k"]):
+    objs = [c for c in app.candidates if c != app.iterator_object]
+    critical = []
+    for s in select_objects(base, objs):
         flag = " <- critical" if s.critical else ""
+        if s.critical:
+            critical.append(s.name)
         print(f"  {s.name:8s} Rs={s.rs:+.3f} p={s.p_value:.1e}{flag}")
     mean_inc = {
         o: float(np.mean([r.inconsistency.get(o, 0) for r in base.records]))
-        for o in ("params", "mu", "nu")
+        for o in objs
     }
     print("mean inconsistency rates:", {k: round(v, 3) for k, v in mean_inc.items()})
 
-    ec = CrashTester(app, PersistPlan.at_loop_end(("params",), app), cache,
+    persist = tuple(critical) or (objs[0],)
+    ec = CrashTester(app, PersistPlan.at_loop_end(persist, app), cache,
                      seed=0, fault=fault, engine=args.engine).run_campaign(
                          args.tests, n_workers=args.workers)
-    print(f"\npersist params at loop end: {ec.class_fractions()}")
+    print(f"\npersist {persist} at loop end: {ec.class_fractions()}")
     print(f"recomputability {base.recomputability:.0%} -> {ec.recomputability:.0%}")
-    print("\ntakeaway: SGD/Adam training is a naturally-resilient iterative "
-          "method (paper §2.2) — block-stale parameters act as a bounded "
-          "perturbation the optimizer absorbs; moments re-warm in a few steps.")
+    if args.app == "lm-train":
+        print("\ntakeaway: SGD/Adam training is a naturally-resilient iterative "
+              "method (paper §2.2) — block-stale parameters act as a bounded "
+              "perturbation the optimizer absorbs; moments re-warm in a few steps.")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import CrashTester, SystemConfig, efficiency_with, efficiency_without
 from repro.core.artifacts import load_plan, save_plan
-from repro.core.workflow import run_workflow
+from repro.core.workflow import WorkflowConfig, run_workflow
 from repro.hpc.suite import ci_app, default_cache
 
 
@@ -33,7 +33,7 @@ def main() -> None:
     print(f"golden: {iters} iterations, residual={res.metric:.2e}, verified={res.passed}")
 
     # steps 1-3: characterize, select objects, select regions
-    wf = run_workflow(app, n_tests=60, cache=cache, seed=0)
+    wf = run_workflow(app, WorkflowConfig(n_tests=60, cache=cache, seed=0))
     print("\nSpearman object selection (paper §5.1):")
     for s in wf.object_scores:
         flag = " <- critical" if s.critical else ""

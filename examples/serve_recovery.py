@@ -1,18 +1,53 @@
-"""Serving with EasyCrash cache persistence: batched decode, a mid-stream
-crash, and session resumption without re-prefill.
+"""Decode serving under failures, both halves of the story:
 
-Usage:  PYTHONPATH=src python examples/serve_recovery.py
+1. *Characterize*: run the paper's crash-campaign workflow on
+   :class:`repro.models.serve_app.DecodeApp` — the decode loop as an
+   IterativeApp — to measure S1–S4 rates, find which decode state is
+   critical (the KV/recurrent cache *is* the session), and ship the
+   resulting persist plan as a fingerprinted artifact.
+2. *Produce*: drive the production server (``repro.launch.serve``) with
+   delta-snapshot persistence, kill it mid-stream, and resume sessions
+   without re-running prefill.
+
+Usage:  PYTHONPATH=src python examples/serve_recovery.py [--tests 16]
 """
+import argparse
 import os
 import shutil
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.core import WorkflowConfig, run_workflow, save_plan
+from repro.hpc.suite import ci_app, default_cache
 from repro.launch.serve import main as serve_main
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tests", type=int, default=16)
+    args = ap.parse_args()
+
+    # ---- 1. campaign characterization of the decode loop -------------------
+    app = ci_app("decode")
+    cache = default_cache(app)
+    print(f"characterizing decode: batch={app.batch} prompt_len={app.prompt_len} "
+          f"steps={app.n_iters} (acceptance: token match >= {app.match_frac})")
+    wf = run_workflow(app, WorkflowConfig(n_tests=args.tests, cache=cache, seed=0))
+    print(f"S1-S4 (no persistence): {wf.baseline_campaign.class_fractions()}")
+    print(f"critical decode state: {wf.critical}")
+    print(f"plan: flush at regions {dict(sorted(wf.plan.region_freq.items()))}; "
+          f"recomputability {wf.baseline_campaign.recomputability:.0%} -> "
+          f"{wf.best_campaign.recomputability:.0%} (best)")
+    plan_path = os.path.join(tempfile.mkdtemp(prefix="easycrash-"),
+                             "decode.plan.json")
+    fp = save_plan(plan_path, wf.plan, app_name=app.name, cache=cache,
+                   meta={"tau": wf.tau, "t_s": wf.t_s})
+    print(f"plan artifact: {plan_path} (sha256 {fp[:16]}...)")
+
+    # ---- 2. production: delta-persisted decode, killed and resumed ---------
+    print("\nproduction server: delta persistence + mid-stream kill/resume")
     workdir = "/tmp/repro_example_serve"
     shutil.rmtree(workdir, ignore_errors=True)
     serve_main([
@@ -22,6 +57,7 @@ def main() -> None:
         "--prompt-len", "32",
         "--decode-steps", "48",
         "--flush-every", "4",
+        "--persist-mode", "delta",
         "--workdir", workdir,
         "--inject-failure-at", "24",
     ])

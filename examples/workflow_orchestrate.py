@@ -38,7 +38,7 @@ def main() -> None:
     from repro.core.cache_sim import ENGINES
     from repro.core.campaign_store import WorkflowStore
     from repro.core.faults import FAULT_MODELS, get_fault_model
-    from repro.core.workflow import run_workflow
+    from repro.core.workflow import WorkflowConfig, run_workflow
     from repro.hpc.suite import CI_SIZES, ci_app, default_cache
 
     ap = argparse.ArgumentParser()
@@ -86,13 +86,13 @@ def main() -> None:
             sys.stdout.flush()
             os._exit(137)
 
-    wf = run_workflow(
-        app, n_tests=args.tests, cache=cache, seed=0,
+    wf = run_workflow(app, WorkflowConfig(
+        n_tests=args.tests, cache=cache, seed=0,
         region_measure=args.region_measure, n_workers=args.workers,
         fault_model=fault, store_path=args.workflow_store,
         shard_callback=on_shard if args.workflow_store else None,
         engine=args.engine,
-    )
+    ))
 
     print(f"\napp={args.app} fault={fault.spec()} workers={args.workers}")
     print(f"shards: {len(executed)} executed this run"

@@ -60,11 +60,13 @@ from .artifacts import (
     save_profile,
     save_workflow,
 )
+from .delta_persist import delta_block_mask, persist_mask_for
 from .efficiency import (
     SystemConfig,
     efficiency_with,
     efficiency_without,
     expected_overhead,
+    persist_overhead_fraction,
     scale_mtbf,
     tau_threshold,
     young_interval,
@@ -86,6 +88,7 @@ from .regions import IterativeApp, Region, State, VerifyResult
 from .selection import select_objects, select_regions, spearman
 from .workflow import (
     CampaignSpec,
+    WorkflowConfig,
     WorkflowOrchestrator,
     WorkflowResult,
     run_workflow,
@@ -106,14 +109,14 @@ __all__ = [
     "ArtifactError", "PlanArtifact", "ProfileArtifact", "WorkflowArtifact",
     "load_plan", "load_profile", "load_workflow", "profile_from_workflow",
     "replay_plan", "save_plan", "save_profile", "save_workflow",
-    "SystemConfig",
-    "efficiency_with", "efficiency_without", "expected_overhead", "scale_mtbf",
-    "tau_threshold",
+    "SystemConfig", "delta_block_mask", "persist_mask_for",
+    "efficiency_with", "efficiency_without", "expected_overhead",
+    "persist_overhead_fraction", "scale_mtbf", "tau_threshold",
     "POLICIES", "FailureTrace", "PoissonTrace", "RecomputeProfile",
     "SimResult", "WeibullTrace", "efficiency_frontier", "optimize_interval",
     "scaled_trace", "simulate_policy",
     "young_interval", "EasyCrashManager", "FlushPolicy", "flatten_state",
     "unflatten_state", "IterativeApp", "Region", "State", "VerifyResult",
     "select_objects", "select_regions", "spearman",
-    "CampaignSpec", "WorkflowOrchestrator", "WorkflowResult", "run_workflow",
+    "CampaignSpec", "WorkflowConfig", "WorkflowOrchestrator", "WorkflowResult", "run_workflow",
 ]

@@ -76,6 +76,13 @@ class NVMArena:
         """Read the NVM image of an object (copy: loads survive app writes)."""
         return self._store[name].copy()
 
+    def peek(self, name: str) -> Optional[np.ndarray]:
+        """No-copy view of the current NVM image (delta-mask computation).
+
+        Callers must not mutate the result; ``None`` if never persisted.
+        """
+        return self._store.get(name)
+
     def snapshot(self) -> Dict[str, np.ndarray]:
         return {k: v.copy() for k, v in self._store.items()}
 

@@ -1,0 +1,95 @@
+"""Incremental ("delta") persistence: Pallas dirty-block masks for the arena.
+
+Bridges :mod:`repro.kernels.delta_snapshot` to :class:`repro.core.arena.NVMArena`.
+The arena reasons in *bytes* (cache blocks of ``block_bytes``); the kernel
+compares element streams.  We therefore run the kernel over flat ``uint8``
+views with ``block_elems = block_bytes``, which makes the kernel's block
+boundary coincide exactly with the arena's — the resulting mask is
+bit-for-bit the mask :func:`repro.core.blocks.block_diff_mask` computes, so a
+delta flush writes a byte-identical NVM image to a whole-object flush
+(asserted by the differential test in ``tests/test_kernel_differential.py``).
+
+On hosts without the Pallas toolchain the CPU reference is used; the contract
+(and therefore the persisted image) is unchanged — only the bandwidth story
+differs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .blocks import DEFAULT_BLOCK_BYTES, _as_byte_view, block_diff_mask
+
+_KERNEL = None
+_KERNEL_FAILED = False
+
+
+def _kernel():
+    """Lazily import the Pallas op; cache the failure so hosts without the
+    toolchain pay the import cost once."""
+    global _KERNEL, _KERNEL_FAILED
+    if _KERNEL is None and not _KERNEL_FAILED:
+        try:
+            from ..kernels.delta_snapshot import dirty_block_mask
+
+            _KERNEL = dirty_block_mask
+        except Exception:
+            _KERNEL_FAILED = True
+    return _KERNEL
+
+
+def kernel_available() -> bool:
+    return _kernel() is not None
+
+
+def delta_block_mask(
+    cur: np.ndarray,
+    live: np.ndarray,
+    block_bytes: int = DEFAULT_BLOCK_BYTES,
+    use_kernel: bool = True,
+) -> np.ndarray:
+    """Per-block "changed" mask between the NVM image and the live value.
+
+    Same contract as :func:`repro.core.blocks.block_diff_mask` (bool
+    ``(n_blocks,)``, final partial block is a real block, padding never reads
+    as dirty) — computed by the ``delta_snapshot`` kernel when available.
+    """
+    k = _kernel() if use_kernel else None
+    if k is None:
+        return block_diff_mask(cur, live, block_bytes)
+    av = _as_byte_view(np.asarray(cur))
+    bv = _as_byte_view(np.asarray(live))
+    if av.size != bv.size:
+        raise ValueError("size mismatch")
+    if av.size == 0:
+        return np.zeros((0,), dtype=bool)
+    mask = np.asarray(k(bv, av, block_elems=int(block_bytes)))
+    return mask.astype(bool)
+
+
+def persist_mask_for(
+    mode: str,
+    cur: Optional[np.ndarray],
+    live: np.ndarray,
+    block_bytes: int = DEFAULT_BLOCK_BYTES,
+) -> Optional[np.ndarray]:
+    """Resolve a :class:`FlushPolicy.persist_mode` to an arena flush mask.
+
+    ``None`` means "let the arena decide" (its own byte diff — the cache-model
+    superset behaviour).  ``cur`` is the current NVM image (``arena.peek``),
+    or ``None`` when the object has never been persisted / was reallocated,
+    in which case the arena full-writes regardless of any mask.
+    """
+    if mode == "auto":
+        return None
+    live = np.asarray(live)
+    if cur is None or cur.nbytes != live.nbytes:
+        return None  # first flush / reallocation: arena full-writes
+    if mode == "full":
+        from .blocks import obj_num_blocks
+
+        return np.ones(obj_num_blocks(live, block_bytes), dtype=bool)
+    if mode == "delta":
+        return delta_block_mask(cur, live, block_bytes)
+    raise ValueError(f"unknown persist_mode {mode!r}; use 'auto', 'full' or 'delta'")

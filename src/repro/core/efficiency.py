@@ -149,3 +149,26 @@ def tau_threshold(cfg: SystemConfig, t_s: float = 0.03, tol: float = 1e-5) -> fl
 def scale_mtbf(base_mtbf: float, base_nodes: int, nodes: int) -> float:
     """MTBF scales inversely with node count (paper's 100k→400k scaling)."""
     return base_mtbf * base_nodes / nodes
+
+
+#: Optane-class sustained NVM write bandwidth, bytes/s (paper's device tier).
+DEFAULT_NVM_WRITE_BW = 2e9
+
+
+def persist_overhead_fraction(
+    bytes_per_flush: float,
+    flush_interval_s: float,
+    nvm_write_bw: float = DEFAULT_NVM_WRITE_BW,
+) -> float:
+    """Measured ``t_s``: fraction of wall time spent writing flush traffic.
+
+    Turns the *measured* delta-flush write volume (``ManagerStats.bytes_written``
+    per flush, which delta mode shrinks to the changed blocks only) into the
+    EasyCrash overhead knob that :func:`efficiency_with` taxes useful time by.
+    Clamped to 1.0 — a flush that cannot keep up with the interval saturates.
+    """
+    if flush_interval_s <= 0:
+        raise ValueError("flush_interval_s must be positive")
+    if nvm_write_bw <= 0:
+        raise ValueError("nvm_write_bw must be positive")
+    return min(1.0, (float(bytes_per_flush) / nvm_write_bw) / flush_interval_s)

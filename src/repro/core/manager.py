@@ -73,12 +73,25 @@ class FlushPolicy:
     ``async_flush``: persist on a background thread (drops to sync in tests).
     ``max_pending``: back-pressure bound; beyond it flushes are *skipped*
     (bounded staleness instead of a stalled step — straggler mitigation).
+    ``persist_mode``: which blocks a flush moves to NVM —
+    ``"auto"`` (arena's own byte diff), ``"delta"`` (incremental: changed
+    blocks only, detected by the ``delta_snapshot`` kernel, CPU reference off
+    TPU) or ``"full"`` (whole-object rewrite, the C/R-style baseline).  All
+    three produce byte-identical NVM images; they differ only in write
+    traffic, which ``ManagerStats.bytes_written`` measures.
     """
 
     leaves: Tuple[str, ...]
     every_steps: int = 1
     async_flush: bool = True
     max_pending: int = 2
+    persist_mode: str = "auto"
+
+    def __post_init__(self):
+        if self.persist_mode not in ("auto", "delta", "full"):
+            raise ValueError(
+                f"unknown persist_mode {self.persist_mode!r}; use 'auto', 'delta' or 'full'"
+            )
 
 
 @dataclass
@@ -86,6 +99,7 @@ class ManagerStats:
     flushes_issued: int = 0
     flushes_skipped: int = 0
     blocks_written: int = 0
+    bytes_written: int = 0
     checkpoints_taken: int = 0
     easycrash_restores: int = 0
     checkpoint_restores: int = 0
@@ -156,8 +170,16 @@ class EasyCrashManager:
         return True
 
     def _flush_now(self, step: int, payload: Mapping[str, np.ndarray]) -> None:
+        from .delta_persist import persist_mask_for
+
         for name, arr in payload.items():
-            self.stats.blocks_written += self.arena.flush(name, arr)
+            mask = persist_mask_for(
+                self.policy.persist_mode, self.arena.peek(name), arr,
+                self.arena.block_bytes,
+            )
+            written = self.arena.flush(name, arr, dirty_resident_mask=mask)
+            self.stats.blocks_written += written
+            self.stats.bytes_written += written * self.arena.block_bytes
         self.arena.save_manifest()
 
     def _drain(self) -> None:

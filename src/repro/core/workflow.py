@@ -27,6 +27,8 @@ resumes from it and executes only the shards that never landed.
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from concurrent.futures import as_completed
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -57,6 +59,87 @@ from .selection import (
 
 #: bump when the workflow-store line layout changes
 WORKFLOW_STORE_VERSION = 1
+
+
+@dataclass(frozen=True)
+class WorkflowConfig:
+    """Everything :func:`run_workflow` needs besides the app, in one frozen,
+    validated object.
+
+    The fields are exactly the historical keyword arguments; a config built
+    with all defaults reproduces the historical default workflow bit for
+    bit.  ``replace(**overrides)`` derives a variant (the idiom for sweeps);
+    :meth:`spec` is the single serialization point — artifact and
+    resume-store fingerprints are computed from it, never from ad-hoc field
+    plumbing.
+
+    ``shard_callback`` is runtime plumbing (progress reporting, crash
+    injection in tests), not workflow identity: it is excluded from
+    :meth:`spec`, so attaching one cannot invalidate a resume store.
+    """
+
+    n_tests: int = 200
+    cache: CacheConfig = CacheConfig()  # frozen dataclass: safe shared default
+    system: Optional[SystemConfig] = None
+    t_s: float = 0.03
+    p_threshold: float = 0.01
+    freq_options: Tuple[int, ...] = (1, 2, 4, 8)
+    seed: int = 0
+    region_measure: str = "isolated"
+    n_workers: int = 1
+    fault_model: Optional[FaultModel] = None
+    scheduler: str = "shared"
+    store_path: Optional[str] = None
+    shard_callback: Optional[Callable[[str, int], None]] = None
+    engine: Optional[str] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "freq_options",
+                           tuple(int(x) for x in self.freq_options))
+        if self.n_tests < 1:
+            raise ValueError(f"n_tests must be >= 1, got {self.n_tests}")
+        if self.region_measure not in ("paper", "isolated"):
+            raise ValueError(f"unknown region_measure {self.region_measure!r}")
+        if self.scheduler not in ("shared", "serial"):
+            raise ValueError(f"unknown scheduler {self.scheduler!r}")
+        if self.scheduler != "shared" and (
+            self.store_path is not None or self.shard_callback is not None
+        ):
+            raise ValueError(
+                "store_path/shard_callback require the 'shared' scheduler"
+            )
+
+    def replace(self, **overrides) -> "WorkflowConfig":
+        """A copy with the given fields overridden (re-validated)."""
+        return dataclasses.replace(self, **overrides)
+
+    def resolved_system(self) -> SystemConfig:
+        return self.system or SystemConfig(mtbf=12 * 3600.0, t_chk=320.0)
+
+    def spec(self, app: IterativeApp, baseline_tester: CrashTester) -> Dict[str, object]:
+        """Workflow identity (JSON-round-trip safe) for stores + artifacts.
+
+        Only fields that change campaign *results* participate; execution
+        plumbing (n_workers, scheduler, store_path, shard_callback, engine —
+        all bit-for-bit invariant by contract) does not.
+        """
+        from .faults import PowerFail
+
+        fault = self.fault_model if self.fault_model is not None else PowerFail()
+        return {
+            "workflow_store_version": WORKFLOW_STORE_VERSION,
+            "app": app.name,
+            "state_digest": baseline_tester._state_digest(),
+            "n_tests": int(self.n_tests),
+            "seed": int(self.seed),
+            "region_measure": str(self.region_measure),
+            "t_s": float(self.t_s),
+            "p_threshold": float(self.p_threshold),
+            "freq_options": [int(x) for x in self.freq_options],
+            "cache_blocks": int(self.cache.capacity_blocks),
+            "block_bytes": int(self.cache.block_bytes),
+            "fault": fault.spec(),
+        }
 
 
 @dataclass(frozen=True)
@@ -368,41 +451,27 @@ def workflow_fingerprint(
     freq_options: Sequence[int],
     fault: FaultModel,
 ) -> Dict[str, object]:
-    """Identity of a workflow for the resume store (JSON-round-trip safe)."""
-    return {
-        "workflow_store_version": WORKFLOW_STORE_VERSION,
-        "app": app.name,
-        "state_digest": baseline_tester._state_digest(),
-        "n_tests": int(n_tests),
-        "seed": int(seed),
-        "region_measure": str(region_measure),
-        "t_s": float(t_s),
-        "p_threshold": float(p_threshold),
-        "freq_options": [int(x) for x in freq_options],
-        "cache_blocks": int(cache.capacity_blocks),
-        "block_bytes": int(cache.block_bytes),
-        "fault": fault.spec(),
-    }
+    """Identity of a workflow for the resume store (JSON-round-trip safe).
+
+    Thin compatibility wrapper over :meth:`WorkflowConfig.spec` — the one
+    serialization point for workflow identity.
+    """
+    cfg = WorkflowConfig(
+        n_tests=n_tests, cache=cache, t_s=t_s, p_threshold=p_threshold,
+        freq_options=tuple(freq_options), seed=seed,
+        region_measure=region_measure, fault_model=fault,
+    )
+    return cfg.spec(app, baseline_tester)
 
 
-def run_workflow(
-    app: IterativeApp,
-    n_tests: int = 200,
-    cache: CacheConfig = CacheConfig(),  # frozen dataclass: safe shared default
-    system: Optional[SystemConfig] = None,
-    t_s: float = 0.03,
-    p_threshold: float = 0.01,
-    freq_options: Sequence[int] = (1, 2, 4, 8),
-    seed: int = 0,
-    region_measure: str = "isolated",
-    n_workers: int = 1,
-    fault_model: Optional[FaultModel] = None,
-    scheduler: str = "shared",
-    store_path: Optional[str] = None,
-    shard_callback: Optional[Callable[[str, int], None]] = None,
-    engine: Optional[str] = None,
-) -> WorkflowResult:
+def run_workflow(app: IterativeApp, config=None, /, **kwargs) -> WorkflowResult:
     """Steps 1–3.
+
+    Primary signature: ``run_workflow(app, WorkflowConfig(...))``; extra
+    keyword arguments are applied as overrides via
+    :meth:`WorkflowConfig.replace`.  The historical 14-keyword form
+    (``run_workflow(app, n_tests=..., cache=..., ...)``) still works as a
+    deprecation shim that builds the same config — results are identical.
 
     ``n_workers`` workers execute the workflow's crash-test shards; results
     are identical for every worker count.
@@ -446,33 +515,52 @@ def run_workflow(
       region only (the paper's own Fig 4b methodology).  Costs W extra
       campaigns but measures the true marginal gain of each region.
     """
-    if region_measure not in ("paper", "isolated"):
-        raise ValueError(f"unknown region_measure {region_measure!r}")
-    if scheduler not in ("shared", "serial"):
-        raise ValueError(f"unknown scheduler {scheduler!r}")
-    if scheduler != "shared" and (store_path is not None or shard_callback is not None):
-        raise ValueError("store_path/shard_callback require the 'shared' scheduler")
-    system = system or SystemConfig(mtbf=12 * 3600.0, t_chk=320.0)
-    tau = tau_threshold(system, t_s=t_s)
+    if isinstance(config, WorkflowConfig):
+        cfg = config.replace(**kwargs) if kwargs else config
+    elif config is None:
+        cfg = WorkflowConfig(**kwargs)
+        if kwargs:
+            warnings.warn(
+                "run_workflow(app, n_tests=..., ...) keyword form is "
+                "deprecated; pass run_workflow(app, WorkflowConfig(...))",
+                DeprecationWarning, stacklevel=2,
+            )
+    elif isinstance(config, int):
+        # legacy positional n_tests
+        cfg = WorkflowConfig(n_tests=config, **kwargs)
+        warnings.warn(
+            "run_workflow(app, n_tests) positional form is deprecated; "
+            "pass run_workflow(app, WorkflowConfig(n_tests=...))",
+            DeprecationWarning, stacklevel=2,
+        )
+    else:
+        raise TypeError(
+            f"config must be a WorkflowConfig (or legacy kwargs), got "
+            f"{type(config).__name__}"
+        )
 
-    if scheduler == "serial":
-        runner = _PerCampaignRunner(app, cache, fault_model, n_workers, engine=engine)
+    n_tests, cache, seed = cfg.n_tests, cfg.cache, cfg.seed
+    t_s, p_threshold, freq_options = cfg.t_s, cfg.p_threshold, cfg.freq_options
+    region_measure, fault_model = cfg.region_measure, cfg.fault_model
+    tau = tau_threshold(cfg.resolved_system(), t_s=t_s)
+
+    if cfg.scheduler == "serial":
+        runner = _PerCampaignRunner(
+            app, cache, fault_model, cfg.n_workers, engine=cfg.engine
+        )
     else:
         store = None
         runner = WorkflowOrchestrator(
-            app, cache, fault_model, n_workers,
-            shard_callback=shard_callback, engine=engine,
+            app, cache, fault_model, cfg.n_workers,
+            shard_callback=cfg.shard_callback, engine=cfg.engine,
         )
-        if store_path is not None:
+        if cfg.store_path is not None:
             from .campaign_store import WorkflowStore
-            from .faults import PowerFail
 
-            store = WorkflowStore(store_path)
-            store.load_or_create(workflow_fingerprint(
+            store = WorkflowStore(cfg.store_path)
+            store.load_or_create(cfg.spec(
                 app,
                 runner.tester(CampaignSpec("baseline", PersistPlan.none(), seed, n_tests)),
-                n_tests, seed, cache, region_measure, t_s, p_threshold,
-                freq_options, fault_model if fault_model is not None else PowerFail(),
             ))
             runner.store = store
 

@@ -22,16 +22,21 @@ _REGISTRY = {
 
 
 def app_names():
-    return sorted(_REGISTRY.keys())
+    """Every registered app name — HPC suite plus the model stack.
+
+    Delegates to :mod:`repro.hpc.suite`, the single registry (imported
+    lazily: suite itself imports ``_REGISTRY`` from this module).
+    """
+    from . import suite
+
+    return list(suite.app_names())
 
 
 def get_app(name: str, **kwargs) -> IterativeApp:
-    """Instantiate an app; kwargs override the default (CI-sized) problem."""
-    try:
-        cls = _REGISTRY[name]
-    except KeyError:
-        raise KeyError(f"unknown app {name!r}; have {app_names()}") from None
-    return cls(**kwargs)
+    """Instantiate a registered app; kwargs override the default problem."""
+    from . import suite
+
+    return suite.get_app(name, **kwargs)
 
 
 __all__ = [

@@ -9,13 +9,62 @@ consistent.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Callable, Dict, Tuple
 
 import numpy as np
 
 from ..core.cache_sim import CacheConfig
 from ..core.regions import IterativeApp, object_blocks
-from . import get_app
+from . import _REGISTRY as _HPC_REGISTRY
+
+
+# ------------------------------------------------------------- app registry
+# One namespace for every campaign-characterizable workload: the HPC suite
+# plus the model stack (LM training, autoregressive decode).  Model apps
+# register lazy factories so importing the suite never pulls in jax's
+# transformer stack.
+_APP_FACTORIES: Dict[str, Callable[..., IterativeApp]] = dict(_HPC_REGISTRY)
+
+
+def register_app(name: str, factory: Callable[..., IterativeApp]) -> None:
+    """Register (or replace) an app factory under ``name``.
+
+    ``factory(**params)`` must return an :class:`IterativeApp`; app classes
+    themselves qualify.
+    """
+    if not callable(factory):
+        raise TypeError(f"factory for {name!r} must be callable")
+    _APP_FACTORIES[str(name)] = factory
+
+
+def app_names() -> Tuple[str, ...]:
+    return tuple(sorted(_APP_FACTORIES))
+
+
+def get_app(name: str, **params) -> IterativeApp:
+    """Instantiate a registered app by name (HPC suite + model stack)."""
+    try:
+        factory = _APP_FACTORIES[name]
+    except KeyError:
+        raise KeyError(f"unknown app {name!r}; have {list(app_names())}") from None
+    return factory(**params)
+
+
+def _lm_train_factory(**params) -> IterativeApp:
+    from ..models.train_app import LMTrainApp
+
+    return LMTrainApp(**params)
+
+
+def _decode_factory(**params) -> IterativeApp:
+    from ..models.serve_app import DecodeApp
+
+    return DecodeApp(**params)
+
+
+register_app("lm-train", _lm_train_factory)
+register_app("decode", _decode_factory)
+
 
 #: CI-sized problem instances (small enough for seconds-scale campaigns)
 CI_SIZES: Dict[str, dict] = {
@@ -26,6 +75,8 @@ CI_SIZES: Dict[str, dict] = {
     "heat": dict(grid=32, n_iters=300),
     "sor": dict(grid=24, n_iters=120),
     "pagerank": dict(n_nodes=192, n_iters=100),
+    "lm-train": dict(n_iters=10, batch=2, seq=16, width=32),
+    "decode": dict(n_iters=12, batch=2, prompt_len=8, width=32),
 }
 
 #: apps of the fault-model sweep (``bench_recomputability.py --fault-sweep``):
@@ -44,6 +95,8 @@ BENCH_SIZES: Dict[str, dict] = {
     "heat": dict(grid=48, n_iters=600),
     "sor": dict(grid=48, n_iters=240),
     "pagerank": dict(n_nodes=512, n_iters=120),
+    "lm-train": dict(n_iters=30, batch=4, seq=32, width=64),
+    "decode": dict(n_iters=32, batch=4, prompt_len=16, width=64),
 }
 
 

@@ -51,7 +51,7 @@ def run(args) -> Dict[str, float]:
         arena = NVMArena(backing_dir=arena_dir)
         resumed = False
     policy = FlushPolicy(leaves=("cache", "tokens"), every_steps=args.flush_every,
-                         async_flush=False)
+                         async_flush=False, persist_mode=args.persist_mode)
     mgr = EasyCrashManager(arena, policy)
 
     max_len = args.prompt_len + args.decode_steps + 1
@@ -95,6 +95,7 @@ def run(args) -> Dict[str, float]:
         "decode_steps": args.decode_steps - start,
         "tokens_per_s": (args.decode_steps - start) * args.prompts / max(dt, 1e-9),
         "blocks_written": mgr.stats.blocks_written,
+        "bytes_written": mgr.stats.bytes_written,
         "resumed": resumed,
         "output_shape": list(out.shape),
     }
@@ -126,6 +127,10 @@ def main(argv=None) -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-steps", type=int, default=64)
     ap.add_argument("--flush-every", type=int, default=8)
+    ap.add_argument("--persist-mode", default="delta",
+                    choices=("auto", "delta", "full"),
+                    help="flush granularity: arena byte diff / delta_snapshot "
+                         "kernel (changed blocks only) / whole-object rewrite")
     ap.add_argument("--workdir", default="/tmp/repro_serve")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--inject-failure-at", type=int, default=0)

@@ -87,6 +87,7 @@ def run(args) -> Dict[str, float]:
     policy = FlushPolicy(
         leaves=("params", "step"), every_steps=args.flush_every,
         async_flush=not args.sync_flush,
+        persist_mode=args.persist_mode,
     )
     mgr = EasyCrashManager(
         arena, policy,
@@ -157,6 +158,7 @@ def run(args) -> Dict[str, float]:
         "flushes": mgr.stats.flushes_issued,
         "flushes_skipped": mgr.stats.flushes_skipped,
         "blocks_written": mgr.stats.blocks_written,
+        "bytes_written": mgr.stats.bytes_written,
         "checkpoints": mgr.stats.checkpoints_taken,
         "easycrash_restores": mgr.stats.easycrash_restores,
         "checkpoint_restores": mgr.stats.checkpoint_restores,
@@ -180,6 +182,10 @@ def main(argv=None) -> None:
     ap.add_argument("--workdir", default="/tmp/repro_train")
     ap.add_argument("--flush-every", type=int, default=1)
     ap.add_argument("--sync-flush", action="store_true")
+    ap.add_argument("--persist-mode", default="auto",
+                    choices=("auto", "delta", "full"),
+                    help="flush granularity: arena byte diff / delta_snapshot "
+                         "kernel (changed blocks only) / whole-object rewrite")
     ap.add_argument("--mtbf", type=float, default=300.0)
     ap.add_argument("--t-chk", type=float, default=5.0)
     ap.add_argument("--recomputability", type=float, default=0.82)

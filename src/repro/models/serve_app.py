@@ -1,0 +1,195 @@
+"""Autoregressive decode as an EasyCrash IterativeApp.
+
+``launch/serve.py``'s decode loop, wrapped in the campaign abstraction so
+S1–S4 rates and persist plans exist for *serving*, not just training.  One
+main-loop iteration decodes one token for a batch of sessions:
+
+    cache  — KV / recurrent decode state, flattened to one vector
+             (expected: critical — it is the session)
+    tokens — the committed token buffer, prompt + generated
+    next   — the staged not-yet-committed token        (temporal)
+    k      — decode-step counter                       (always persisted)
+
+Regions: ``decode`` (the transformer step + greedy argmax) and ``commit``
+(append the staged token, advance the counter).
+
+Intrinsic fault tolerance here is *bounded decode divergence*: a crash that
+leaves a stale cache image in NVM restarts with the bookmarked step counter
+but decode state from an earlier step — greedy decoding then re-derives the
+stream, and acceptance verification is prefix/token match against the golden
+stream (``match_frac``).  Unlike the HPC apps there is no fixed point pulling
+the state back, so persistence of the cache matters more, which is exactly
+what the campaign measures.
+
+Registered in the suite app registry as ``"decode"``
+(:func:`repro.hpc.suite.get_app`).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.regions import IterativeApp, Region, State, VerifyResult
+from .config import ModelConfig, scaled_down
+from .transformer import decode_step, init_cache, init_params, prefill
+
+
+class DecodeApp(IterativeApp):
+    name = "decode"
+    candidates = ("cache", "tokens", "next", "k")
+    iterator_object = "k"
+    #: campaign fault tuning: each KV slot is written once and then read for
+    #: the rest of the stream — ancient-but-large cold state, so spread bit
+    #: flips wide; correlated failures should strike the dominant decode
+    #: region where the cache is mid-update.
+    fault_defaults = {
+        "bit-flip": {"n_bits": 16},
+        "correlated-region": {"shape": 3.0},
+    }
+
+    def __init__(
+        self,
+        base: ModelConfig = None,
+        n_iters: int = 32,
+        batch: int = 2,
+        prompt_len: int = 8,
+        width: int = 32,
+        match_frac: float = 0.9,
+        seed: int = 0,
+    ):
+        from ..configs import get_arch
+
+        base = base or get_arch("stablelm-1.6b")
+        self.cfg = scaled_down(base, width=width)
+        self.n_iters = n_iters
+        self.batch = batch
+        self.prompt_len = prompt_len
+        self.max_len = prompt_len + n_iters + 1
+        self.match_frac = match_frac
+        self._seed = seed
+        self._golden_tokens = None
+        self._build()
+
+    # ------------------------------------------------------------- plumbing
+    def _build(self):
+        cfg = self.cfg
+        self._params = init_params(cfg, jax.random.PRNGKey(self._seed))
+        template = init_cache(cfg, self.batch, self.max_len)
+        template = {k: v for k, v in template.items() if k != "t"}
+        leaves, treedef = jax.tree.flatten(template)
+        self._treedef = treedef
+        self._shapes = [(l.shape, l.dtype) for l in leaves]
+        self._sizes = [int(np.prod(s)) for s, _ in self._shapes]
+
+        def unflatten(vec):
+            out = []
+            off = 0
+            for (shape, dt), size in zip(self._shapes, self._sizes):
+                out.append(vec[off:off + size].reshape(shape).astype(dt))
+                off += size
+            return jax.tree.unflatten(self._treedef, out)
+
+        def flatten(tree):
+            return jnp.concatenate([
+                x.reshape(-1).astype(jnp.float32) for x in jax.tree.leaves(tree)
+            ])
+
+        self._flatten = flatten
+
+        @jax.jit
+        def decode_flat(vec, token, t):
+            cache = unflatten(vec)
+            cache["t"] = t
+            logits, new_cache = decode_step(cfg, self._params, token, cache)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+            new_cache = {k: v for k, v in new_cache.items() if k != "t"}
+            return flatten(new_cache), nxt
+
+        self._decode_flat = decode_flat
+
+        @jax.jit
+        def prefill_fn(prompts):
+            logits, pcache = prefill(cfg, self._params, prompts)
+            full = init_cache(cfg, self.batch, self.max_len)
+            from ..launch.serve import _splice_cache
+
+            spliced = _splice_cache(cfg, full, pcache, self.prompt_len)
+            spliced = {k: v for k, v in spliced.items() if k != "t"}
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return flatten(spliced), first
+
+        self._prefill = prefill_fn
+
+    # ----------------------------------------------------------------- state
+    def init(self, seed: int = 0) -> State:
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(7), (self.batch, self.prompt_len), 0, self.cfg.vocab
+        ).astype(jnp.int32)
+        vec, first = self._prefill(prompts)
+        tokens = np.zeros((self.batch, self.max_len), np.int32)
+        tokens[:, : self.prompt_len] = np.asarray(prompts)
+        tokens[:, self.prompt_len] = np.asarray(first)
+        return {
+            "cache": np.asarray(vec, np.float32),
+            "tokens": tokens,
+            "next": np.zeros((self.batch, 1), np.int32),
+            "k": np.zeros(1, np.int64),
+        }
+
+    def _region_decode(self, s: State) -> State:
+        s = dict(s)
+        t = self.prompt_len + int(s["k"][0])
+        vec, nxt = self._decode_flat(
+            jnp.asarray(s["cache"]),
+            jnp.asarray(s["tokens"][:, t:t + 1]),
+            np.int32(t),
+        )
+        s["cache"] = np.asarray(vec, np.float32)
+        s["next"] = np.asarray(nxt, np.int32)
+        return s
+
+    def _region_commit(self, s: State) -> State:
+        s = dict(s)
+        t = self.prompt_len + int(s["k"][0])
+        tokens = np.array(s["tokens"], copy=True)
+        tokens[:, t + 1] = s["next"][:, 0]
+        s["tokens"] = tokens
+        s["k"] = s["k"] + 1
+        return s
+
+    def regions(self) -> Tuple[Region, ...]:
+        return (
+            Region("decode", self._region_decode, writes=("cache", "next"),
+                   reads=("cache", "tokens", "k"), cost=4.0,
+                   hot_reads=("tokens",)),
+            Region("commit", self._region_commit, writes=("tokens", "k"),
+                   reads=("next", "tokens", "k"), cost=0.2),
+        )
+
+    # ----------------------------------------------------------- verification
+    def _golden(self) -> np.ndarray:
+        if self._golden_tokens is None:
+            s = self.init(self._seed)
+            for _ in range(self.n_iters):
+                s = self.run_iteration(s)
+            self._golden_tokens = np.array(s["tokens"], copy=True)
+        return self._golden_tokens
+
+    def _match_fraction(self, state: State) -> float:
+        golden = self._golden()
+        lo, hi = self.prompt_len, self.prompt_len + self.n_iters + 1
+        got = np.asarray(state["tokens"])[:, lo:hi]
+        want = golden[:, lo:hi]
+        return float(np.mean(got == want))
+
+    def verify(self, state: State) -> VerifyResult:
+        frac = self._match_fraction(state)
+        return VerifyResult(frac >= self.match_frac, frac,
+                            detail=f"token match {frac:.3f}")
+
+    def progress(self, state: State) -> float:
+        # residual-style metric: divergence from the golden stream
+        return 1.0 - self._match_fraction(state)

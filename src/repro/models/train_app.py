@@ -13,14 +13,18 @@ moment trees flatten to one vector each):
     grads  — last gradient          (temporal)
     k      — step counter           (always persisted)
 
-Regions: ``grads`` (fwd+bwd) and ``update`` (optimizer).  Acceptance
+Regions mirror the paper's first-level loop structure of one optimizer
+step: ``grads`` (fwd+bwd), ``moments`` (Adam moment accumulation), and
+``apply`` (bias-corrected parameter update + bookkeeping).  Acceptance
 verification: eval loss within a band of the golden run's final loss —
 fidelity-threshold acceptance, the ML analogue of a convergence test.
+
+Registered in the suite app registry as ``"lm-train"``
+(:func:`repro.hpc.suite.get_app`).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +34,10 @@ from ..core.regions import IterativeApp, Region, State, VerifyResult
 from .config import ModelConfig, scaled_down
 from .transformer import init_params, loss_and_aux
 
+_B1, _B2, _EPS = 0.9, 0.95, 1e-8
 
-def _synthetic_batch(key_int: int, batch: int, seq: int, vocab: int) -> jnp.ndarray:
+
+def _synthetic_batch(key_int, batch: int, seq: int, vocab: int) -> jnp.ndarray:
     """Learnable stream: affine next-token map with 10% noise."""
     key = jax.random.PRNGKey(9000)
     key = jax.random.fold_in(key, key_int)
@@ -52,6 +58,14 @@ class LMTrainApp(IterativeApp):
     name = "lm-train"
     candidates = ("params", "mu", "nu", "k")
     iterator_object = "k"
+    #: campaign fault tuning: the parameter vector is the one chronically
+    #: dirty hot object (read by fwd+bwd every step, rewritten every apply),
+    #: so silent corruption there is the interesting SDC surface, and
+    #: correlated failures should concentrate in the dominant grads region.
+    fault_defaults = {
+        "bit-flip": {"n_bits": 8},
+        "correlated-region": {"shape": 3.0},
+    }
 
     def __init__(
         self,
@@ -61,12 +75,13 @@ class LMTrainApp(IterativeApp):
         seq: int = 32,
         lr: float = 2e-2,
         loss_band: float = 1.05,
+        width: int = 64,
         seed: int = 0,
     ):
         from ..configs import get_arch
 
         base = base or get_arch("stablelm-1.6b")
-        self.cfg = scaled_down(base, width=64)
+        self.cfg = scaled_down(base, width=width)
         self.n_iters = n_iters
         self.batch = batch
         self.seq = seq
@@ -103,7 +118,6 @@ class LMTrainApp(IterativeApp):
         self._unflatten = unflatten
         self._flatten = flatten
 
-        @jax.jit
         def grad_fn(vec, it):
             params = unflatten(vec)
             tokens = _synthetic_batch(it, self.batch, self.seq, cfg.vocab)
@@ -111,6 +125,14 @@ class LMTrainApp(IterativeApp):
             return loss
 
         self._vgrad = jax.jit(jax.grad(grad_fn))
+        # batched-lane gradient: ``lax.map`` keeps each lane's HLO identical
+        # to the serial ``_vgrad`` body (a vmapped fwd+bwd would batch the
+        # matmuls into different reduction tilings — not bitwise)
+        self._vgrad_batch = jax.jit(
+            lambda vecs, its: jax.lax.map(
+                lambda xs: jax.grad(grad_fn)(xs[0], xs[1]), (vecs, its)
+            )
+        )
 
         @jax.jit
         def eval_fn(vec):
@@ -138,32 +160,57 @@ class LMTrainApp(IterativeApp):
 
     def _region_grads(self, s: State) -> State:
         s = dict(s)
-        g = self._vgrad(jnp.asarray(s["params"]), int(s["k"][0]))
+        g = self._vgrad(jnp.asarray(s["params"]), np.int32(s["k"][0]))
         s["grads"] = np.asarray(g, np.float32)
         return s
 
-    def _region_update(self, s: State) -> State:
+    def _region_moments(self, s: State) -> State:
         s = dict(s)
-        b1, b2, eps = 0.9, 0.95, 1e-8
-        t = int(s["k"][0]) + 1
         g = s["grads"]
-        mu = b1 * s["mu"] + (1 - b1) * g
-        nu = b2 * s["nu"] + (1 - b2) * g * g
-        mu_hat = mu / (1 - b1 ** t)
-        nu_hat = nu / (1 - b2 ** t)
-        s["params"] = s["params"] - self.lr * mu_hat / (np.sqrt(nu_hat) + eps)
-        s["mu"], s["nu"] = mu, nu
+        s["mu"] = _B1 * s["mu"] + (1 - _B1) * g
+        s["nu"] = _B2 * s["nu"] + (1 - _B2) * g * g
+        return s
+
+    def _region_apply(self, s: State) -> State:
+        s = dict(s)
+        t = int(s["k"][0]) + 1
+        mu_hat = s["mu"] / (1 - _B1 ** t)
+        nu_hat = s["nu"] / (1 - _B2 ** t)
+        s["params"] = s["params"] - self.lr * mu_hat / (np.sqrt(nu_hat) + _EPS)
         s["k"] = s["k"] + 1
         return s
 
     def regions(self) -> Tuple[Region, ...]:
         return (
             Region("grads", self._region_grads, writes=("grads",),
-                   reads=("params", "k"), cost=3.0),
-            Region("update", self._region_update,
-                   writes=("mu", "nu", "params", "k"),
-                   reads=("grads", "mu", "nu", "params"), cost=1.0),
+                   reads=("params", "k"), cost=3.0, hot_reads=("params",)),
+            Region("moments", self._region_moments, writes=("mu", "nu"),
+                   reads=("grads", "mu", "nu"), cost=1.0),
+            Region("apply", self._region_apply, writes=("params", "k"),
+                   reads=("mu", "nu", "params", "k"), cost=1.0),
         )
+
+    # ------------------------------------------------------- batched recompute
+    # The gradient (the expensive part) batches through ``lax.map``; the Adam
+    # math replays the serial numpy regions per lane, so every lane is
+    # bitwise the serial trajectory (asserted by the lm-train engine-parity
+    # test in tests/test_model_apps.py).
+    supports_batched_step = True
+
+    def run_iteration_batch(self, states):
+        vecs = np.stack([s["params"] for s in states])
+        its = np.asarray([int(s["k"][0]) for s in states], np.int32)
+        grads = np.asarray(
+            self._vgrad_batch(jnp.asarray(vecs), jnp.asarray(its)), np.float32
+        )
+        out = []
+        for i, s in enumerate(states):
+            s = dict(s)
+            s["grads"] = grads[i]
+            s = self._region_moments(s)
+            s = self._region_apply(s)
+            out.append(s)
+        return out
 
     # ----------------------------------------------------------- verification
     def _golden(self) -> float:

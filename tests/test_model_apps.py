@@ -1,0 +1,208 @@
+"""Campaign characterization of the model stack: lm-train + decode apps.
+
+The apps themselves live in ``repro.models.train_app`` / ``serve_app``; what
+matters here is that they are *first-class suite citizens*: constructible
+through the app registry, campaign-characterizable with the same S1–S4
+machinery as the HPC suite, worker-count invariant, kill/resume-able through
+a shard store, and engine-parity clean ('vec' == 'ref').
+"""
+import dataclasses as dc
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CacheConfig,
+    CrashTester,
+    PersistPlan,
+    WorkflowConfig,
+    run_workflow,
+)
+from repro.hpc.suite import app_names, ci_app, default_cache, get_app, register_app
+
+
+def _dicts(camp):
+    return [dc.asdict(r) for r in camp.records]
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    app = ci_app("lm-train")
+    return app, default_cache(app)
+
+
+@pytest.fixture(scope="module")
+def decode_setup():
+    app = ci_app("decode")
+    return app, default_cache(app)
+
+
+# -------------------------------------------------------------- app registry
+def test_registry_covers_model_stack():
+    names = app_names()
+    for name in ("lm-train", "decode", "mg", "cg", "pagerank"):
+        assert name in names
+    app = get_app("lm-train", n_iters=4, batch=2, seq=8, width=32)
+    assert app.name == "lm-train"
+    assert get_app("decode", n_iters=4, batch=1, prompt_len=4, width=32).name == "decode"
+
+
+def test_registry_unknown_name_lists_available():
+    with pytest.raises(KeyError, match="lm-train"):
+        get_app("no-such-app")
+
+
+def test_register_app_validates_and_overrides():
+    with pytest.raises(TypeError, match="callable"):
+        register_app("bad", None)
+    sentinel = ci_app("mg")
+    register_app("custom-mg", lambda **kw: sentinel)
+    try:
+        assert get_app("custom-mg") is sentinel
+        assert "custom-mg" in app_names()
+    finally:
+        from repro.hpc.suite import _APP_FACTORIES
+
+        del _APP_FACTORIES["custom-mg"]
+
+
+def test_fault_defaults_present_on_model_apps(lm_setup, decode_setup):
+    for app, _ in (lm_setup, decode_setup):
+        assert "bit-flip" in app.fault_defaults
+        assert "correlated-region" in app.fault_defaults
+
+
+# ----------------------------------------------------------------- lm-train
+def test_lm_train_campaign_classes_partition(lm_setup):
+    app, cache = lm_setup
+    camp = CrashTester(app, PersistPlan.none(), cache, seed=0).run_campaign(10)
+    f = camp.class_fractions()
+    assert set(f) == {"S1", "S2", "S3", "S4"}
+    assert abs(sum(f.values()) - 1.0) < 1e-9
+    assert len(camp.records) == 10
+
+
+def test_lm_train_worker_parity(lm_setup):
+    """n_workers in {1, 2} must give identical campaigns.  The app's payload
+    carries jitted closures (not picklable), so 2 workers falls back to the
+    serial path with a warning — same results, by construction."""
+    app, cache = lm_setup
+    serial = CrashTester(app, PersistPlan.none(), cache, seed=1).run_campaign(
+        6, n_workers=1
+    )
+    with pytest.warns(RuntimeWarning, match="not picklable"):
+        fanned = CrashTester(app, PersistPlan.none(), cache, seed=1).run_campaign(
+            6, n_workers=2
+        )
+    assert _dicts(fanned) == _dicts(serial)
+
+
+def test_lm_train_kill_resume(lm_setup, tmp_path):
+    """A killed lm-train campaign resumes from its shard store to results
+    identical to an uninterrupted run."""
+    app, cache = lm_setup
+    path = str(tmp_path / "lm_campaign.jsonl")
+    full = CrashTester(app, PersistPlan.none(), cache, seed=2).run_campaign(
+        8, store_path=path
+    )
+    lines = open(path).read().splitlines()
+    assert len(lines) >= 4  # header + >= 3 shards
+    # kill mid-run: header + one complete shard + a torn append
+    with open(path, "w") as f:
+        f.write("\n".join(lines[:2]) + "\n" + lines[2][: len(lines[2]) // 2])
+    resumed = CrashTester(app, PersistPlan.none(), cache, seed=2).run_campaign(
+        8, store_path=path
+    )
+    assert _dicts(resumed) == _dicts(full)
+
+
+def test_lm_train_engine_parity(lm_setup):
+    """'vec' and 'ref' campaign engines are bit-for-bit identical on the
+    batched-step training app (the lax.map + per-lane-numpy contract)."""
+    app, cache = lm_setup
+    assert app.supports_batched_step
+    vec = CrashTester(app, PersistPlan.none(), cache, seed=3, engine="vec").run_campaign(8)
+    ref = CrashTester(app, PersistPlan.none(), cache, seed=3, engine="ref").run_campaign(8)
+    assert _dicts(vec) == _dicts(ref)
+
+
+def test_lm_train_persisting_params_never_hurts(lm_setup):
+    app, cache = lm_setup
+    base = CrashTester(app, PersistPlan.none(), cache, seed=4).run_campaign(10)
+    ec = CrashTester(
+        app, PersistPlan.at_loop_end(("params",), app), cache, seed=4
+    ).run_campaign(10)
+    assert ec.recomputability >= base.recomputability
+
+
+@pytest.mark.slow
+def test_lm_train_workflow_end_to_end(lm_setup, tmp_path):
+    """The full paper workflow on LM training: S1–S4 rates, object selection,
+    a knapsack plan under (t_s, tau), and a fingerprinted plan artifact."""
+    from repro.core import load_plan, save_plan
+
+    app, cache = lm_setup
+    wf = run_workflow(app, WorkflowConfig(n_tests=20, cache=cache, seed=0))
+    f = wf.baseline_campaign.class_fractions()
+    assert abs(sum(f.values()) - 1.0) < 1e-9
+    assert wf.region_selection.total_overhead <= wf.t_s + 1e-9
+    assert set(wf.plan.objects) <= set(app.candidates)
+    path = str(tmp_path / "lm_plan.json")
+    save_plan(path, wf.plan, app.name, cache=cache)
+    art = load_plan(path)
+    assert art.app_name == "lm-train"
+
+
+# -------------------------------------------------------------------- decode
+def test_decode_app_iterates_and_verifies(decode_setup):
+    app, _ = decode_setup
+    s = app.init(0)
+    for _ in range(app.n_iters):
+        s = app.run_iteration(s)
+    v = app.verify(s)
+    assert v.passed and v.metric == 1.0
+    # committed stream is fully populated past the prompt
+    toks = np.asarray(s["tokens"])
+    assert int(s["k"][0]) == app.n_iters
+    assert toks.shape == (app.batch, app.prompt_len + app.n_iters + 1)
+
+
+def test_decode_divergence_bounded_not_exact(decode_setup):
+    """The decode acceptance test is prefix/token match, not bitwise state:
+    a perturbed cache must still verify when divergence stays in band."""
+    app, _ = decode_setup
+    s = app.init(0)
+    for _ in range(app.n_iters):
+        s = app.run_iteration(s)
+    perturbed = dict(s)
+    toks = np.array(perturbed["tokens"], copy=True)
+    toks[0, -1] += 1  # one diverged token out of batch*(n_iters+1)
+    perturbed["tokens"] = toks
+    v = app.verify(perturbed)
+    assert v.metric < 1.0
+    assert v.passed  # bounded divergence is acceptable...
+    app_strict = ci_app("decode", match_frac=1.0)
+    assert not app_strict.verify(perturbed).passed  # ...unless the band is 0
+
+
+def test_decode_campaign_classes_partition(decode_setup):
+    app, cache = decode_setup
+    camp = CrashTester(app, PersistPlan.none(), cache, seed=0).run_campaign(10)
+    f = camp.class_fractions()
+    assert abs(sum(f.values()) - 1.0) < 1e-9
+    assert len(camp.records) == 10
+
+
+@pytest.mark.slow
+def test_decode_workflow_end_to_end(decode_setup, tmp_path):
+    from repro.core import load_plan, save_plan
+
+    app, cache = decode_setup
+    wf = run_workflow(app, WorkflowConfig(n_tests=16, cache=cache, seed=0))
+    f = wf.baseline_campaign.class_fractions()
+    assert abs(sum(f.values()) - 1.0) < 1e-9
+    assert set(wf.plan.objects) <= set(app.candidates)
+    path = str(tmp_path / "decode_plan.json")
+    save_plan(path, wf.plan, app.name, cache=cache)
+    assert load_plan(path).app_name == "decode"

@@ -1,0 +1,113 @@
+"""WorkflowConfig: the consolidated run_workflow API and its kwargs shim."""
+import dataclasses as dc
+import warnings
+
+import pytest
+
+from repro.core import (
+    CacheConfig,
+    CampaignSpec,
+    CrashTester,
+    PersistPlan,
+    SystemConfig,
+    WorkflowConfig,
+    run_workflow,
+)
+from repro.hpc.suite import ci_app, default_cache
+
+
+@pytest.fixture(scope="module")
+def mg_setup():
+    app = ci_app("mg")
+    return app, default_cache(app)
+
+
+def _wf_dicts(wf):
+    return [dc.asdict(r) for r in wf.baseline_campaign.records]
+
+
+# -------------------------------------------------------------- construction
+def test_defaults_and_freeze():
+    cfg = WorkflowConfig()
+    assert cfg.n_tests == 200 and cfg.seed == 0
+    assert cfg.freq_options == (1, 2, 4, 8)
+    with pytest.raises(dc.FrozenInstanceError):
+        cfg.n_tests = 5
+
+
+def test_validation():
+    with pytest.raises(ValueError, match="n_tests"):
+        WorkflowConfig(n_tests=0)
+    with pytest.raises(ValueError, match="region_measure"):
+        WorkflowConfig(region_measure="bogus")
+    with pytest.raises(ValueError, match="scheduler"):
+        WorkflowConfig(scheduler="bogus")
+    with pytest.raises(ValueError, match="shared"):
+        WorkflowConfig(scheduler="serial", store_path="/tmp/x.jsonl")
+
+
+def test_replace_revalidates():
+    cfg = WorkflowConfig(n_tests=10)
+    assert cfg.replace(seed=3).seed == 3
+    assert cfg.replace(seed=3).n_tests == 10
+    with pytest.raises(ValueError):
+        cfg.replace(n_tests=0)
+    # freq_options coerce to int tuples however they arrive
+    assert cfg.replace(freq_options=[1.0, 2]).freq_options == (1, 2)
+
+
+def test_spec_is_workflow_identity(mg_setup):
+    """spec() carries exactly the result-changing fields; execution plumbing
+    (workers, scheduler, callbacks) must not perturb it."""
+    app, cache = mg_setup
+    cfg = WorkflowConfig(n_tests=12, cache=cache)
+    tester = CrashTester(app, PersistPlan.none(), cache, seed=0)
+    base = cfg.spec(app, tester)
+    assert base["app"] == app.name and base["n_tests"] == 12
+    same = cfg.replace(n_workers=4, engine="ref",
+                       shard_callback=lambda k, i: None).spec(app, tester)
+    assert same == base
+    assert cfg.replace(seed=1).spec(app, tester) != base
+    assert cfg.replace(t_s=0.05).spec(app, tester) != base
+    import json
+
+    json.dumps(base)  # JSON-round-trip safe by contract
+
+
+# ---------------------------------------------------------------------- shim
+def test_kwargs_shim_warns_and_matches_config(mg_setup):
+    """Old-style keyword calls go through a deprecation shim and produce
+    results identical to the explicit WorkflowConfig call."""
+    app, cache = mg_setup
+    new = run_workflow(app, WorkflowConfig(n_tests=14, cache=cache, seed=0))
+    with pytest.warns(DeprecationWarning, match="WorkflowConfig"):
+        old = run_workflow(app, n_tests=14, cache=cache, seed=0)
+    assert _wf_dicts(old) == _wf_dicts(new)
+    assert old.plan == new.plan
+    assert old.t_s == new.t_s
+
+
+def test_config_with_override_kwargs(mg_setup):
+    """run_workflow(app, cfg, seed=...) applies kwargs as replace() overrides
+    without a deprecation warning."""
+    app, cache = mg_setup
+    cfg = WorkflowConfig(n_tests=12, cache=cache, seed=0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        a = run_workflow(app, cfg, seed=1)
+    b = run_workflow(app, cfg.replace(seed=1))
+    assert _wf_dicts(a) == _wf_dicts(b)
+
+
+def test_rejects_non_config_positional(mg_setup):
+    app, _ = mg_setup
+    with pytest.raises(TypeError, match="WorkflowConfig"):
+        run_workflow(app, "nonsense")
+
+
+def test_campaign_spec_seeds_follow_contract():
+    """The W+2 seed layout (baseline=seed, best=seed+1, region k=seed+2+k)
+    is workflow identity — spelled out here so a refactor cannot silently
+    reshuffle it and orphan every resume store."""
+    spec = CampaignSpec("baseline", PersistPlan.none(), 7, 10)
+    assert spec.key == "baseline" and spec.seed == 7 and spec.n_tests == 10
