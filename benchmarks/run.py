@@ -11,6 +11,8 @@
   bench_efficiency      — Fig 10 + Fig 11 (closed-form model)
   bench_sysim           — Fig 10/11 shapes from the failure-trace simulator,
                           driven by campaign-measured recompute profiles
+  bench_fleetsim        — replica fleet serving under failures: goodput/SLO/
+                          tail latency per policy (repo-root BENCH_fleet.json)
   bench_kernels         — Pallas kernels vs oracles (us/call CSV)
   bench_workflow        — shared-pool orchestrator vs serial workflow engine
   bench_roofline        — §Roofline table from the dry-run artifacts
@@ -65,6 +67,7 @@ def main() -> None:
     from . import (
         bench_campaign_hotpath,
         bench_efficiency,
+        bench_fleetsim,
         bench_kernels,
         bench_model_campaign,
         bench_nvm_writes,
@@ -89,6 +92,7 @@ def main() -> None:
         ("efficiency", bench_efficiency.run),
         ("sysim", bench_sysim.run),
         ("sysim_frontier", bench_sysim.frontier),
+        ("fleetsim", bench_fleetsim.run),
         ("kernels", bench_kernels.run),
         ("roofline", bench_roofline.run),
     ]

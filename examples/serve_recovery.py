@@ -8,6 +8,10 @@
 2. *Produce*: drive the production server (``repro.launch.serve``) with
    delta-snapshot persistence, kill it mid-stream, and resume sessions
    without re-running prefill.
+3. *Project*: feed the campaign-measured recovery profile and persist
+   overhead into the fleet simulator (``repro.core.fleetsim``) — what the
+   measured decode loop means for goodput, SLO, and p99 across a replica
+   fleet failing at paper-like rates.
 
 Usage:  PYTHONPATH=src python examples/serve_recovery.py [--tests 16]
 """
@@ -19,7 +23,19 @@ import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import WorkflowConfig, run_workflow, save_plan
+from repro.core import (
+    POLICIES,
+    ArrivalProcess,
+    FleetConfig,
+    PoissonTrace,
+    RecomputeProfile,
+    ServiceModel,
+    SystemConfig,
+    WorkflowConfig,
+    fleet_frontier,
+    run_workflow,
+    save_plan,
+)
 from repro.hpc.suite import ci_app, default_cache
 from repro.launch.serve import main as serve_main
 
@@ -61,6 +77,30 @@ def main() -> None:
         "--workdir", workdir,
         "--inject-failure-at", "24",
     ])
+
+    # ---- 3. fleet projection: the measured profile at serving scale --------
+    print("\nfleet projection: measured decode profile across 4 replicas")
+    profile = RecomputeProfile.from_campaign(wf.best_campaign)
+    cfg = FleetConfig(
+        n_replicas=4,
+        arrival=ArrivalProcess(rate=5.0, amplitude=0.3),
+        service=ServiceModel(mean_s=0.5, sigma=0.6, prefill_s=1.5),
+        trace=PoissonTrace(mtbf=900.0),
+        system=SystemConfig(mtbf=900.0, t_chk=30.0, nvm_restore_time=2.0),
+        slo_latency=2.0,
+        queue_cap=48,
+        horizon=1800.0,
+        t_s=wf.t_s,
+        seed=0,
+    )
+    doc = fleet_frontier(cfg, profile)
+    print(f"  profile S1-S4: {dict(profile.fractions)} (persist tax "
+          f"t_s={wf.t_s:.3f})")
+    for policy in POLICIES:
+        p = doc["policies"][policy]
+        print(f"  {policy:10s} goodput={p['goodput']:.3f}rps "
+              f"slo={p['slo_violation_frac']:.3f} "
+              f"p99={p['latency_p99']:.2f}s fails={p['n_failures']}")
 
 
 if __name__ == "__main__":

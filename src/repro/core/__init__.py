@@ -82,6 +82,15 @@ from .sysim import (
     optimize_interval,
     scaled_trace,
     simulate_policy,
+    trace_from_spec,
+)
+from .fleetsim import (
+    ArrivalProcess,
+    FleetConfig,
+    FleetResult,
+    ServiceModel,
+    fleet_frontier,
+    simulate_fleet,
 )
 from .manager import EasyCrashManager, FlushPolicy, flatten_state, unflatten_state
 from .regions import IterativeApp, Region, State, VerifyResult
@@ -114,7 +123,9 @@ __all__ = [
     "persist_overhead_fraction", "scale_mtbf", "tau_threshold",
     "POLICIES", "FailureTrace", "PoissonTrace", "RecomputeProfile",
     "SimResult", "WeibullTrace", "efficiency_frontier", "optimize_interval",
-    "scaled_trace", "simulate_policy",
+    "scaled_trace", "simulate_policy", "trace_from_spec",
+    "ArrivalProcess", "FleetConfig", "FleetResult", "ServiceModel",
+    "fleet_frontier", "simulate_fleet",
     "young_interval", "EasyCrashManager", "FlushPolicy", "flatten_state",
     "unflatten_state", "IterativeApp", "Region", "State", "VerifyResult",
     "select_objects", "select_regions", "spearman",

@@ -114,6 +114,18 @@ def scaled_trace(trace: FailureTrace, base_nodes: int, nodes: int) -> FailureTra
     return dataclasses.replace(trace, mtbf=scale_mtbf(trace.mtbf, base_nodes, nodes))
 
 
+def trace_from_spec(spec: Mapping[str, object]) -> FailureTrace:
+    """Rehydrate a :class:`FailureTrace` from its :meth:`~FailureTrace.spec`
+    (the inverse used when frontier/fleet artifacts are read back)."""
+    kind = spec.get("trace")
+    if kind == "poisson":
+        return PoissonTrace(mtbf=float(spec["mtbf"]))
+    if kind == "weibull":
+        return WeibullTrace(mtbf=float(spec["mtbf"]),
+                            shape=float(spec.get("shape", 0.7)))
+    raise ValueError(f"unknown trace spec {dict(spec)!r}")
+
+
 # --------------------------------------------------------- recompute profile
 @dataclass(frozen=True)
 class RecomputeProfile:
@@ -604,6 +616,7 @@ __all__ = [
     "PoissonTrace",
     "WeibullTrace",
     "scaled_trace",
+    "trace_from_spec",
     "RecomputeProfile",
     "SimResult",
     "IntervalPoint",

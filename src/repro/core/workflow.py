@@ -518,21 +518,26 @@ def run_workflow(app: IterativeApp, config=None, /, **kwargs) -> WorkflowResult:
     if isinstance(config, WorkflowConfig):
         cfg = config.replace(**kwargs) if kwargs else config
     elif config is None:
-        cfg = WorkflowConfig(**kwargs)
         if kwargs:
+            # stacklevel=2 attributes the warning to run_workflow's caller
+            # (the site that must migrate), not this shim; it fires before
+            # WorkflowConfig validation so even a call with bad kwargs tells
+            # the caller to migrate.  tests/test_workflow_config.py pins the
+            # warning's origin.
             warnings.warn(
                 "run_workflow(app, n_tests=..., ...) keyword form is "
                 "deprecated; pass run_workflow(app, WorkflowConfig(...))",
                 DeprecationWarning, stacklevel=2,
             )
+        cfg = WorkflowConfig(**kwargs)
     elif isinstance(config, int):
         # legacy positional n_tests
-        cfg = WorkflowConfig(n_tests=config, **kwargs)
         warnings.warn(
             "run_workflow(app, n_tests) positional form is deprecated; "
             "pass run_workflow(app, WorkflowConfig(n_tests=...))",
             DeprecationWarning, stacklevel=2,
         )
+        cfg = WorkflowConfig(n_tests=config, **kwargs)
     else:
         raise TypeError(
             f"config must be a WorkflowConfig (or legacy kwargs), got "

@@ -1,0 +1,122 @@
+"""Golden regression: pinned fleet-serving metrics for a small seeded fleet.
+
+Any change that shifts the fleet DES — event ordering, RNG stream layout,
+queueing/dispatch, recovery accounting, latency bookkeeping — fails here
+loudly, per policy.  Integer counters (arrived/served/dropped, failures,
+recoveries) are pinned exactly; float metrics (goodput, SLO fraction,
+latency percentiles) are pinned rounded to 6 decimals so the pins survive
+last-ulp libm differences across platforms (within-platform byte-identity
+is asserted separately in tests/test_fleetsim.py).  The pins live in
+``tests/golden/fleet_goldens.json``; when a shift is *intended*, regenerate
+
+    PYTHONPATH=src python tests/test_fleet_goldens.py --regen
+
+and say so in the commit message.
+"""
+import json
+import os
+
+import pytest
+
+from repro.core.efficiency import SystemConfig
+from repro.core.fleetsim import ArrivalProcess, FleetConfig, ServiceModel, simulate_fleet
+from repro.core.sysim import POLICIES, PoissonTrace, RecomputeProfile
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "fleet_goldens.json")
+
+#: synthetic profile — fixed fractions, not a campaign run, so the fleet
+#: pins only move when the *fleet* simulator moves
+GOLDEN_PROFILE = RecomputeProfile.from_fractions(
+    "golden", {"S1": 0.7, "S2": 0.2, "S3": 0.05, "S4": 0.05},
+    extra_iters_hist=((2, 3), (8, 1)),
+)
+
+ROUND = 6
+
+_INT_KEYS = (
+    "arrived", "served", "dropped", "dropped_down", "in_flight",
+    "slo_violations", "n_failures", "n_checkpoints", "n_nvm_recoveries",
+    "n_fallbacks", "n_cold_restarts",
+)
+_FLOAT_KEYS = (
+    "goodput", "slo_violation_frac", "availability",
+    "latency_p50", "latency_p95", "latency_p99", "latency_mean", "latency_max",
+)
+
+
+def golden_config() -> FleetConfig:
+    return FleetConfig(
+        n_replicas=3,
+        arrival=ArrivalProcess(rate=2.5, amplitude=0.3),
+        service=ServiceModel(mean_s=0.4, sigma=0.5, prefill_s=0.8),
+        trace=PoissonTrace(mtbf=400.0),
+        system=SystemConfig(mtbf=400.0, t_chk=15.0, nvm_restore_time=2.0),
+        slo_latency=1.5,
+        queue_cap=24,
+        horizon=1200.0,
+        t_s=0.02,
+        seed=321,
+    )
+
+
+def _entry(policy: str) -> dict:
+    cfg = golden_config()
+    prof = GOLDEN_PROFILE if policy in ("easycrash", "hybrid") else None
+    r = simulate_fleet(policy, cfg, prof)
+    p = r.payload()
+    out = {k: p[k] for k in _INT_KEYS}
+    out.update({k: round(p[k], ROUND) for k in _FLOAT_KEYS})
+    return out
+
+
+def _load_goldens():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def test_fleet_golden_smoke():
+    """Fast-gate leg: the single hybrid pin — the policy exercising every
+    recovery path (NVM warm starts, fallback checkpoints, cold restarts)."""
+    goldens = _load_goldens()
+    assert _entry("hybrid") == goldens["policies"]["hybrid"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", POLICIES)
+def test_fleet_metrics_match_golden(policy):
+    goldens = _load_goldens()
+    assert goldens["fingerprint"] == golden_config().fingerprint(), (
+        "golden fleet config drifted; regenerate tests/golden/fleet_goldens.json"
+    )
+    assert policy in goldens["policies"], f"no golden pinned for {policy}; --regen"
+    got = _entry(policy)
+    want = goldens["policies"][policy]
+    assert got == want, (
+        f"{policy}: fleet metrics drifted:\n got {got}\nwant {want}"
+    )
+
+
+def _regen():
+    cfg = golden_config()
+    doc = {
+        "fingerprint": cfg.fingerprint(),
+        "config": cfg.spec(),
+        "policies": {policy: _entry(policy) for policy in POLICIES},
+    }
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH}")
+    for policy, e in doc["policies"].items():
+        print(f"  {policy:10s} goodput={e['goodput']} p99={e['latency_p99']} "
+              f"served={e['served']}/{e['arrived']}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

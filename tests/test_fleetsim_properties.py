@@ -1,0 +1,94 @@
+"""Hypothesis property tests for the fleet simulator.
+
+Randomized generalizations of the fixed-seed invariants in
+``tests/test_fleetsim.py``: request conservation and the replica-seconds
+time partition must hold for *every* policy and fleet geometry, and
+identical seeds must reproduce byte-identical results.
+"""
+import dataclasses
+import json
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e .[dev])"
+)
+from hypothesis import given, settings, strategies as st
+
+from repro.core.efficiency import SystemConfig
+from repro.core.fleetsim import ArrivalProcess, FleetConfig, ServiceModel, simulate_fleet
+from repro.core.sysim import POLICIES, PoissonTrace, RecomputeProfile
+
+PROFILE = RecomputeProfile.from_fractions(
+    "decode", {"S1": 0.75, "S2": 0.15, "S3": 0.05, "S4": 0.05},
+    extra_iters_hist=((2, 4), (9, 1)),
+)
+
+SERVE_SYS = SystemConfig(mtbf=1800.0, t_chk=20.0, nvm_restore_time=2.0)
+
+
+def _prof_for(policy):
+    return PROFILE if policy in ("easycrash", "hybrid") else None
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    policy=st.sampled_from(POLICIES),
+    seed=st.integers(0, 2**31 - 1),
+    rate=st.floats(0.0, 5.0),
+    amplitude=st.floats(0.0, 0.9),
+    mtbf=st.floats(120.0, 1e6),
+    sigma=st.floats(0.0, 1.2),
+    n_replicas=st.integers(1, 5),
+    queue_cap=st.integers(1, 40),
+    t_s=st.floats(0.0, 0.3),
+)
+def test_request_conservation_and_time_partition(
+    policy, seed, rate, amplitude, mtbf, sigma, n_replicas, queue_cap, t_s
+):
+    """arrived == served + dropped + in-flight, exactly, for every policy and
+    geometry; and replica-seconds partition into up/checkpoint/down."""
+    cfg = FleetConfig(
+        n_replicas=n_replicas,
+        arrival=ArrivalProcess(rate=rate, amplitude=amplitude),
+        service=ServiceModel(mean_s=0.4, sigma=sigma, prefill_s=0.8),
+        trace=PoissonTrace(mtbf=mtbf),
+        system=SERVE_SYS,
+        slo_latency=1.5,
+        queue_cap=queue_cap,
+        horizon=900.0,
+        t_s=t_s,
+        seed=seed,
+    )
+    r = simulate_fleet(policy, cfg, _prof_for(policy))
+    assert r.arrived == r.served + r.dropped + r.in_flight
+    assert r.dropped_down <= r.dropped
+    assert sum(r.breakdown.values()) == pytest.approx(
+        cfg.n_replicas * cfg.horizon, abs=1e-6
+    )
+    assert 0.0 <= r.availability <= 1.0
+    assert 0.0 <= r.slo_violation_frac <= 1.0
+    if r.served:
+        assert r.latency_p50 <= r.latency_p95 <= r.latency_p99 <= r.latency_max
+
+
+@settings(max_examples=15, deadline=None)
+@given(policy=st.sampled_from(POLICIES), seed=st.integers(0, 2**31 - 1))
+def test_identical_seeds_are_byte_identical(policy, seed):
+    cfg = FleetConfig(
+        n_replicas=3,
+        arrival=ArrivalProcess(rate=3.0, amplitude=0.25),
+        service=ServiceModel(mean_s=0.4, sigma=0.5, prefill_s=0.8),
+        trace=PoissonTrace(mtbf=600.0),
+        system=SERVE_SYS,
+        slo_latency=1.5,
+        queue_cap=32,
+        horizon=600.0,
+        seed=seed,
+    )
+    a = simulate_fleet(policy, cfg, _prof_for(policy))
+    b = simulate_fleet(policy, cfg, _prof_for(policy))
+    assert a == b
+    assert json.dumps(a.payload(), sort_keys=True) == \
+        json.dumps(b.payload(), sort_keys=True)
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)

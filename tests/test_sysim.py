@@ -26,6 +26,7 @@ from repro.core.sysim import (
     optimize_interval,
     scaled_trace,
     simulate_policy,
+    trace_from_spec,
 )
 from repro.hpc.suite import ci_app, default_cache
 
@@ -154,6 +155,26 @@ def test_scaled_trace_matches_paper_scaling():
     assert tw.mtbf == pytest.approx(6 * 3600.0)
 
 
+def test_trace_from_spec_round_trips():
+    """spec() -> trace_from_spec reproduces the trace — including the
+    output of scaled_trace, so persisted fleet/frontier configs replay."""
+    for tr in (
+        PoissonTrace(3600.0),
+        WeibullTrace(7200.0, shape=0.55),
+        scaled_trace(PoissonTrace(12 * 3600.0), 1, 48),
+        scaled_trace(WeibullTrace(12 * 3600.0, shape=0.6), 100_000, 200_000),
+    ):
+        back = trace_from_spec(tr.spec())
+        assert type(back) is type(tr)
+        assert back == tr
+        assert back.spec() == tr.spec()
+
+
+def test_trace_from_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown trace"):
+        trace_from_spec({"trace": "lognormal", "mtbf": 100.0})
+
+
 # ----------------------------------------------------------------- profile
 def test_profile_from_campaign_measures_rates_and_histogram():
     app = ci_app("kmeans")
@@ -186,8 +207,22 @@ def test_profile_draws_follow_fractions():
 def test_profile_validation():
     with pytest.raises(ValueError, match="sum"):
         RecomputeProfile.from_fractions("x", {"S1": 0.5})
+    with pytest.raises(ValueError, match="sum"):
+        RecomputeProfile.from_fractions(
+            "x", {"S1": 0.8, "S2": 0.3, "S3": 0.1}
+        )  # sums to 1.2 — silently renormalizing would fake success rates
     with pytest.raises(ValueError, match="unknown outcome"):
         RecomputeProfile("x", {}, {"S0": 1.0})
+
+
+def test_empty_histogram_draws_zero_extra_iters():
+    """An all-S1 campaign records no S2 outcomes, so the extra-iteration
+    histogram is empty; draws must be 0 (no recompute tail), not an error."""
+    prof = RecomputeProfile.from_fractions("x", {"S1": 1.0})
+    assert prof.extra_iters_hist == ()
+    rng = np.random.default_rng(0)
+    assert [prof.draw_extra_iters(rng) for _ in range(5)] == [0] * 5
+    assert prof.mean_extra_iters() == 0.0
 
 
 def test_simulate_policy_validation():

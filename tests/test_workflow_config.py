@@ -87,6 +87,34 @@ def test_kwargs_shim_warns_and_matches_config(mg_setup):
     assert old.t_s == new.t_s
 
 
+def test_kwargs_shim_warning_points_at_caller(mg_setup):
+    """The DeprecationWarning must be attributed to the *calling* site (the
+    code that has to migrate to WorkflowConfig), not to workflow.py's shim —
+    stacklevel drift here turns every deprecation report into a dead end."""
+    app, cache = mg_setup
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always", DeprecationWarning)
+        run_workflow(app, n_tests=14, cache=cache, seed=0)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert dep, "kwargs shim did not warn"
+    assert dep[0].filename == __file__, (
+        f"warning blamed {dep[0].filename}, not the caller"
+    )
+
+
+def test_positional_shim_warning_points_at_caller(mg_setup):
+    """Same contract for the legacy positional form run_workflow(app, n_tests)."""
+    app, cache = mg_setup
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always", DeprecationWarning)
+        run_workflow(app, 14, cache=cache, seed=0)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert dep, "positional shim did not warn"
+    assert dep[0].filename == __file__, (
+        f"warning blamed {dep[0].filename}, not the caller"
+    )
+
+
 def test_config_with_override_kwargs(mg_setup):
     """run_workflow(app, cfg, seed=...) applies kwargs as replace() overrides
     without a deprecation warning."""
