@@ -1,0 +1,161 @@
+"""Static persist-plan analyzer vs the measured W+2 workflow.
+
+Two questions, one table each:
+
+* **Agreement** — for every suite app, does the jaxpr dataflow analyzer
+  (:func:`repro.analysis.analyze_app`) predict the same persist-region set
+  the measured campaign workflow selects?  Fast mode compares against the
+  pinned measured decisions (``tests/golden/static_agreement.json``, the
+  n_tests=40 / seed=0 oracle); ``--full`` re-measures every app live and
+  reports predicted-vs-measured from fresh campaigns.
+
+* **Verify efficiency** — on sor, ``plan_source="static+verify"`` must land
+  the *identical* final plan as the full measured workflow while executing
+  >= 40% fewer crash tests (the acceptance bar: confident regions skip their
+  isolated campaigns).  Asserted here, not just reported.
+
+``--smoke`` is the CI fast-gate subset: agreement on sor + pagerank only,
+no campaigns at all (~seconds).  The scheduled CI job runs the default mode
+and uploads ``results/static_plan_agreement.csv`` as the
+predicted-vs-measured report.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from .common import APPS, emit
+
+GOLDEN = os.path.join(
+    os.path.dirname(__file__), "..", "tests", "golden", "static_agreement.json"
+)
+
+#: acceptance bar: static+verify must save at least this fraction of the
+#: measured workflow's crash tests on sor (while producing the same plan)
+MIN_TESTS_SAVED = 0.40
+
+
+def _measured_decisions(name: str, fast: bool) -> Dict[str, object]:
+    """Measured persist-region decision set: golden (fast) or re-run (full)."""
+    if fast:
+        with open(GOLDEN) as f:
+            g = json.load(f)[name]
+        return {
+            "persist_regions": set(g["persist_regions"]),
+            "critical": tuple(g["critical"]),
+            "n_tests": int(g["n_tests_total"]),
+        }
+    from repro.core.workflow import WorkflowConfig, run_workflow
+    from repro.hpc.suite import ci_app, default_cache
+
+    app = ci_app(name)
+    wf = run_workflow(app, WorkflowConfig(
+        n_tests=40, seed=0, cache=default_cache(app)))
+    return {
+        "persist_regions": set(wf.plan.region_freq),
+        "critical": wf.critical,
+        "n_tests": wf.tests_executed,
+    }
+
+
+def agreement_report(apps, fast: bool) -> List[Dict[str, object]]:
+    from repro.analysis import analyze_app
+    from repro.hpc.suite import ci_app, default_cache
+
+    rows: List[Dict[str, object]] = []
+    for name in apps:
+        app = ci_app(name)
+        sp = analyze_app(app, cache=default_cache(app))
+        static_regions = {
+            r.index for r in sp.regions if r.decision == "persist"
+        }
+        m = _measured_decisions(name, fast)
+        agree = static_regions == m["persist_regions"]
+        rows.append({
+            "app": name,
+            "static_regions": "|".join(map(str, sorted(static_regions))),
+            "measured_regions": "|".join(map(str, sorted(m["persist_regions"]))),
+            "agree": agree,
+            "static_critical": "|".join(sp.persist_objects()),
+            "measured_critical": "|".join(m["critical"]),
+            "uncertain_regions": "|".join(map(str, sp.uncertain_regions())),
+            "static_write_mib_per_iter": round(
+                sp.write_traffic_bytes() / 2**20, 4),
+            "measured_n_tests": m["n_tests"],
+        })
+    return rows
+
+
+def verify_efficiency_rows() -> List[Dict[str, object]]:
+    """sor: measured W+2 vs static+verify — identical plan, fewer tests."""
+    from repro.core.workflow import WorkflowConfig, run_workflow
+    from repro.hpc.suite import ci_app, default_cache
+
+    app = ci_app("sor")
+    cache = default_cache(app)
+    measured = run_workflow(app, WorkflowConfig(
+        n_tests=40, seed=0, cache=cache))
+    app2 = ci_app("sor")
+    verified = run_workflow(app2, WorkflowConfig(
+        n_tests=40, seed=0, cache=cache, plan_source="static+verify"))
+
+    same_plan = (
+        measured.plan.objects == verified.plan.objects
+        and dict(measured.plan.region_freq) == dict(verified.plan.region_freq)
+    )
+    saved = 1.0 - verified.tests_executed / max(1, measured.tests_executed)
+    assert same_plan, (
+        f"static+verify diverged from the measured plan on sor: "
+        f"{verified.plan} vs {measured.plan}"
+    )
+    assert saved >= MIN_TESTS_SAVED, (
+        f"static+verify saved only {saved:.0%} of crash tests on sor "
+        f"(bar: {MIN_TESTS_SAVED:.0%})"
+    )
+    return [{
+        "app": "sor",
+        "measured_tests": measured.tests_executed,
+        "verify_tests": verified.tests_executed,
+        "tests_saved_frac": round(saved, 4),
+        "identical_plan": same_plan,
+        "plan": "|".join(
+            f"{k}:{v}" for k, v in sorted(verified.plan.region_freq.items())),
+    }]
+
+
+def run(fast: bool = True, smoke: bool = False) -> None:
+    apps = ("sor", "pagerank") if smoke else APPS
+    rows = agreement_report(apps, fast=fast or smoke)
+    emit(rows, "static_plan_agreement")
+    n_agree = sum(bool(r["agree"]) for r in rows)
+    print(f"[static_plan] agreement {n_agree}/{len(rows)} apps")
+    if smoke:
+        if n_agree != len(rows):
+            raise SystemExit(
+                f"static-plan smoke: expected full agreement on {apps}, "
+                f"got {n_agree}/{len(rows)}")
+        return
+    # the tier-1 acceptance bar, kept in the bench as well so the scheduled
+    # report can't silently regress below it
+    if n_agree < 5:
+        raise SystemExit(
+            f"static-plan agreement regressed: {n_agree}/7 apps (bar: 5/7)")
+    emit(verify_efficiency_rows(), "static_plan_verify")
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="re-measure every app's workflow instead of "
+                         "comparing against the pinned golden decisions")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast gate: sor + pagerank agreement only")
+    args = ap.parse_args()
+    run(fast=not args.full, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,8 @@
                           persist traffic (writes the repo-root BENCH_model.json)
   bench_recomputability — Fig 3 + Fig 6 (fault-model sweep, robustness matrix)
   bench_selection       — Fig 4a/4b + Fig 5
+  bench_static_plan     — static analyzer vs measured plans: agreement table
+                          + static+verify tests-saved on sor
   bench_persist_overhead— Table 4
   bench_nvm_writes      — Fig 9
   bench_efficiency      — Fig 10 + Fig 11 (closed-form model)
@@ -75,6 +77,7 @@ def main() -> None:
         bench_recomputability,
         bench_roofline,
         bench_selection,
+        bench_static_plan,
         bench_sysim,
         bench_workflow,
     )
@@ -86,6 +89,7 @@ def main() -> None:
         ("fault_sweep", bench_recomputability.fault_sweep),
         ("robustness_matrix", bench_recomputability.robustness_matrix),
         ("workflow_orchestrator", bench_workflow.run),
+        ("static_plan", bench_static_plan.run),
         ("selection", bench_selection.run),
         ("persist_overhead", bench_persist_overhead.run),
         ("nvm_writes", bench_nvm_writes.run),

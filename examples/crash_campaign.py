@@ -35,12 +35,12 @@ from repro.configs import get_arch
 from repro.core import ENGINES, CacheConfig, CrashTester, PersistPlan
 from repro.core.faults import FAULT_MODELS, get_fault_model
 from repro.core.selection import select_objects
-from repro.hpc.suite import CI_SIZES, get_app
+from repro.hpc.suite import CI_SIZES, app_names, get_app
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--app", default="lm-train", choices=sorted(CI_SIZES),
+    ap.add_argument("--app", default="lm-train",
                     help="registered app name (HPC suite + model stack)")
     ap.add_argument("--arch", default="stablelm-1.6b",
                     help="base architecture for the model apps "
@@ -63,7 +63,12 @@ def main() -> None:
                          "identical")
     args = ap.parse_args()
 
-    kw = dict(CI_SIZES[args.app], n_iters=args.iters)
+    known = app_names()
+    if args.app not in known:
+        ap.error(f"unknown app {args.app!r}; registered apps: "
+                 + ", ".join(sorted(known)))
+
+    kw = dict(CI_SIZES.get(args.app, {}), n_iters=args.iters)
     if args.app in ("lm-train", "decode"):
         kw["base"] = get_arch(args.arch)
     app = get_app(args.app, **kw)

@@ -1,0 +1,23 @@
+"""Static persist-plan analysis (algorithm-directed characterization).
+
+The W+2 crash-test workflow *measures* which data objects and code regions
+are worth persisting.  This package *derives* most of those answers from the
+program itself: each region is traced to a jaxpr, a dataflow pass classifies
+every tracked object (dead-across-crash / reconstructible / accumulator /
+crash-critical), and the result is a predicted :class:`~repro.analysis
+.classify.StaticPlan` with per-object confidence — consumed by
+``run_workflow(plan_source="static" | "static+verify")``.
+
+On the same walker, :mod:`repro.analysis.determinism_lint` checks batched
+step kernels for bitwise-per-lane safety (``python -m repro.analysis.lint``).
+"""
+from .classify import (  # noqa: F401
+    CONFIDENCE_THRESHOLD,
+    DAMPING_THRESHOLD,
+    ObjectReport,
+    RegionReport,
+    StaticPlan,
+    analyze_app,
+)
+from .determinism_lint import LintFinding, lint_app, lint_batched_fn  # noqa: F401
+from .jaxpr_walk import RegionTrace, numpy_shim, trace_region  # noqa: F401

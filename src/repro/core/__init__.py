@@ -47,17 +47,21 @@ from .faults import (
     get_fault_model,
 )
 from .artifacts import (
+    STATIC_PLAN_KIND,
     ArtifactError,
     PlanArtifact,
     ProfileArtifact,
+    StaticPlanArtifact,
     WorkflowArtifact,
     load_plan,
     load_profile,
+    load_static_plan,
     load_workflow,
     profile_from_workflow,
     replay_plan,
     save_plan,
     save_profile,
+    save_static_plan,
     save_workflow,
 )
 from .delta_persist import delta_block_mask, persist_mask_for
@@ -93,7 +97,7 @@ from .fleetsim import (
     simulate_fleet,
 )
 from .manager import EasyCrashManager, FlushPolicy, flatten_state, unflatten_state
-from .regions import IterativeApp, Region, State, VerifyResult
+from .regions import BatchedKernel, IterativeApp, Region, State, VerifyResult
 from .selection import select_objects, select_regions, spearman
 from .workflow import (
     CampaignSpec,
@@ -115,9 +119,11 @@ __all__ = [
     "FAULT_MODELS", "BitFlip", "CorrelatedRegion", "FaultModel", "MultiCrash",
     "PowerFail", "TornWrite", "all_fault_models", "fault_model_from_spec",
     "get_fault_model",
-    "ArtifactError", "PlanArtifact", "ProfileArtifact", "WorkflowArtifact",
-    "load_plan", "load_profile", "load_workflow", "profile_from_workflow",
-    "replay_plan", "save_plan", "save_profile", "save_workflow",
+    "ArtifactError", "PlanArtifact", "ProfileArtifact", "StaticPlanArtifact",
+    "WorkflowArtifact", "STATIC_PLAN_KIND",
+    "load_plan", "load_profile", "load_static_plan", "load_workflow",
+    "profile_from_workflow", "replay_plan", "save_plan", "save_profile",
+    "save_static_plan", "save_workflow",
     "SystemConfig", "delta_block_mask", "persist_mask_for",
     "efficiency_with", "efficiency_without", "expected_overhead",
     "persist_overhead_fraction", "scale_mtbf", "tau_threshold",
@@ -127,7 +133,8 @@ __all__ = [
     "ArrivalProcess", "FleetConfig", "FleetResult", "ServiceModel",
     "fleet_frontier", "simulate_fleet",
     "young_interval", "EasyCrashManager", "FlushPolicy", "flatten_state",
-    "unflatten_state", "IterativeApp", "Region", "State", "VerifyResult",
+    "unflatten_state", "BatchedKernel", "IterativeApp", "Region", "State",
+    "VerifyResult",
     "select_objects", "select_regions", "spearman",
     "CampaignSpec", "WorkflowConfig", "WorkflowOrchestrator", "WorkflowResult", "run_workflow",
 ]

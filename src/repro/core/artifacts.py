@@ -43,6 +43,7 @@ ARTIFACT_VERSION = 1
 PLAN_KIND = "easycrash-persist-plan"
 WORKFLOW_KIND = "easycrash-workflow-result"
 PROFILE_KIND = "easycrash-recompute-profile"
+STATIC_PLAN_KIND = "easycrash-static-plan"
 
 
 class ArtifactError(RuntimeError):
@@ -242,6 +243,7 @@ class WorkflowArtifact:
     fault_spec: Dict[str, object]
     cache: Optional[CacheConfig]
     fingerprint: str
+    plan_source: str = "measured"
 
     @property
     def fault(self) -> FaultModel:
@@ -279,16 +281,25 @@ def save_workflow(
              "overhead": _finite_or_none(c.overhead)}
             for c in wf.region_selection.choices
         ],
-        "campaign_fractions": {
-            "baseline": wf.baseline_campaign.class_fractions(),
-            "best": wf.best_campaign.class_fractions(),
-        },
+        "campaign_fractions": (
+            {
+                "baseline": wf.baseline_campaign.class_fractions(),
+                "best": wf.best_campaign.class_fractions(),
+            }
+            # a static-plan workflow measured no campaigns at all
+            if wf.baseline_campaign is not None and wf.best_campaign is not None
+            else {}
+        ),
         "summary": {k: _finite_or_none(v) for k, v in wf.summary().items()},
         "tau": _finite_or_none(wf.tau),
         "t_s": _finite_or_none(wf.t_s),
         "fault": (fault if fault is not None else PowerFail()).spec(),
         "cache": cache_to_payload(cache),
     }
+    # only when non-default, so historical artifact fingerprints are unchanged
+    plan_source = getattr(wf, "plan_source", "measured")
+    if plan_source != "measured":
+        payload["plan_source"] = str(plan_source)
     return _write_envelope(path, WORKFLOW_KIND, payload)
 
 
@@ -309,6 +320,51 @@ def load_workflow(path: str) -> WorkflowArtifact:
         t_s=_nan_if_none(payload["t_s"]),
         fault_spec=dict(payload["fault"]),
         cache=cache_from_payload(payload.get("cache")),
+        fingerprint=fp,
+        plan_source=str(payload.get("plan_source", "measured")),
+    )
+
+
+# ---------------------------------------------------------- static-plan codec
+@dataclass(frozen=True)
+class StaticPlanArtifact:
+    """A loaded static persist-plan prediction (verified fingerprint).
+
+    The payload is the :meth:`repro.analysis.classify.StaticPlan.to_payload`
+    document: per-object classification + confidence, per-region decision +
+    estimated write traffic.  :meth:`static_plan` rehydrates the dataclass
+    (imported lazily — core does not depend on the analysis package).
+    """
+
+    app_name: str
+    payload: Dict[str, object]
+    meta: Dict[str, object]
+    fingerprint: str
+
+    def static_plan(self):
+        from ..analysis.classify import StaticPlan
+
+        return StaticPlan.from_payload(self.payload)
+
+
+def save_static_plan(path: str, static_plan,
+                     meta: Optional[Mapping[str, object]] = None) -> str:
+    """Write a static persist-plan artifact; returns its fingerprint.
+
+    ``static_plan`` is duck-typed (anything with ``to_payload()``), so the
+    analysis package stays an optional consumer of core, not a dependency.
+    """
+    payload: Dict[str, object] = dict(static_plan.to_payload())
+    payload["meta"] = _sanitize_meta(meta or {})
+    return _write_envelope(path, STATIC_PLAN_KIND, payload)
+
+
+def load_static_plan(path: str) -> StaticPlanArtifact:
+    payload, fp = _read_envelope(path, STATIC_PLAN_KIND)
+    return StaticPlanArtifact(
+        app_name=str(payload["app"]),
+        payload={k: v for k, v in payload.items() if k != "meta"},
+        meta=dict(payload.get("meta", {})),
         fingerprint=fp,
     )
 

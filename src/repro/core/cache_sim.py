@@ -73,6 +73,12 @@ class CacheConfig:
     capacity_blocks: int = 2048
     block_bytes: int = DEFAULT_BLOCK_BYTES
 
+    def spec(self) -> Dict[str, object]:
+        return {
+            "capacity_blocks": int(self.capacity_blocks),
+            "block_bytes": int(self.block_bytes),
+        }
+
 
 # --------------------------------------------------------------------- events
 @dataclass(frozen=True)

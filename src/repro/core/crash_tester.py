@@ -124,7 +124,7 @@ class PlannedTest:
     fault_seed: int = 0
 
 
-@dataclass
+@dataclass(frozen=True)
 class CampaignResult:
     app_name: str
     plan: PersistPlan
@@ -135,6 +135,24 @@ class CampaignResult:
     @property
     def n(self) -> int:
         return len(self.records)
+
+    def spec(self) -> Dict[str, object]:
+        """Strict-JSON identity of this campaign's inputs and outcome."""
+        return {
+            "app": self.app_name,
+            "plan": {
+                "objects": list(self.plan.objects),
+                "region_freq": sorted(
+                    (int(k), int(v)) for k, v in self.plan.region_freq.items()
+                ),
+            },
+            "n_tests": self.n,
+            "golden_iters": int(self.golden_iters),
+            "class_fractions": self.class_fractions(),
+            "window_write_stats": {
+                k: float(v) for k, v in sorted(self.window_write_stats.items())
+            },
+        }
 
     def class_fractions(self) -> Dict[str, float]:
         out = {c: 0.0 for c in ("S1", "S2", "S3", "S4")}

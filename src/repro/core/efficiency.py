@@ -48,6 +48,15 @@ class SystemConfig:
     def t_r(self) -> float:
         return self.t_chk  # T_r = T_chk (paper assumption, after [7])
 
+    def spec(self) -> Dict[str, object]:
+        return {
+            "mtbf": float(self.mtbf),
+            "t_chk": float(self.t_chk),
+            "total_time": float(self.total_time),
+            "t_sync_frac": float(self.t_sync_frac),
+            "nvm_restore_time": float(self.nvm_restore_time),
+        }
+
 
 @dataclass(frozen=True)
 class EfficiencyResult:

@@ -287,6 +287,9 @@ class FleetResult:
         d["breakdown"] = {k: float(v) for k, v in sorted(d["breakdown"].items())}
         return d
 
+    def spec(self) -> Dict[str, object]:
+        return self.payload()
+
 
 # --------------------------------------------------------------- internals
 class _Request:

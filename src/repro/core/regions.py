@@ -41,6 +41,31 @@ class VerifyResult:
     metric: float
     detail: str = ""
 
+    def spec(self) -> Dict[str, object]:
+        """JSON-round-trip-safe identity (fingerprint input)."""
+        m = float(self.metric)
+        return {
+            "passed": bool(self.passed),
+            "metric": m if m == m and abs(m) != float("inf") else None,
+            "detail": str(self.detail),
+        }
+
+
+@dataclass(frozen=True)
+class BatchedKernel:
+    """One batched-lane kernel of a ``supports_batched_step`` app, exposed
+    for the bitwise-batchability lint (:mod:`repro.analysis.determinism_lint`).
+
+    ``fn(*args)`` must be traceable by :func:`jax.make_jaxpr`; ``batched``
+    maps argument positions to the lane axis (axis 0 by convention).  Static
+    configuration (grid size, loop counts) is closed over, not passed.
+    """
+
+    name: str
+    fn: Callable
+    args: Tuple
+    batched: Mapping[int, int]
+
 
 class IterativeApp:
     """Base class for region-structured iterative applications."""
@@ -71,6 +96,22 @@ class IterativeApp:
 
     def init(self, seed: int = 0) -> State:
         raise NotImplementedError
+
+    # --------------------------------------------------- static-analysis hooks
+    def static_hints(self) -> Mapping[str, str]:
+        """Algorithm knowledge the dataflow walker cannot derive, as
+        ``{object: hint}``.  Recognized hints: ``"exact-accumulator"`` — the
+        object is an exact (bitwise-verified) accumulation, so re-executing a
+        crashed iteration double-counts and the object is crash-critical
+        regardless of any contraction argument."""
+        return {}
+
+    def batched_kernels(self) -> Tuple["BatchedKernel", ...]:
+        """The jax kernels behind ``run_iteration_batch``, for the
+        bitwise-batchability lint.  Apps setting ``supports_batched_step``
+        should expose every batched dispatch here; the lint (and CI) walks
+        each kernel's jaxpr for cross-lane reductions."""
+        return ()
 
     def restart_init(self, seed: int, persisted: Mapping[str, np.ndarray]) -> State:
         """Rebuild a runnable state from the (possibly inconsistent) NVM image.

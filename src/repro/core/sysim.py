@@ -263,6 +263,23 @@ class SimResult:
     lost_work: float           # work wiped by rollbacks/restarts
     breakdown: Dict[str, float]  # wall time per phase bucket
 
+    def spec(self) -> Dict[str, object]:
+        """Strict-JSON dict of the full result (sorted breakdown)."""
+        return {
+            "policy": self.policy,
+            "efficiency": float(self.efficiency),
+            "useful_time": float(self.useful_time),
+            "total_time": float(self.total_time),
+            "interval": float(self.interval),
+            "n_failures": int(self.n_failures),
+            "n_checkpoints": int(self.n_checkpoints),
+            "n_nvm_recoveries": int(self.n_nvm_recoveries),
+            "n_fallbacks": int(self.n_fallbacks),
+            "n_restarts": int(self.n_restarts),
+            "lost_work": float(self.lost_work),
+            "breakdown": {k: float(v) for k, v in sorted(self.breakdown.items())},
+        }
+
 
 class _Clock:
     """Wall clock + failure stream.  Advancing through a phase either

@@ -92,6 +92,12 @@ class WorkflowConfig:
     store_path: Optional[str] = None
     shard_callback: Optional[Callable[[str, int], None]] = None
     engine: Optional[str] = None
+    #: where the persist plan comes from: ``"measured"`` (the paper's W+2
+    #: campaign), ``"static"`` (the jaxpr dataflow prediction, no campaigns
+    #: at all), or ``"static+verify"`` (campaigns only for the regions the
+    #: static classification is uncertain about; confident decisions are
+    #: taken as-is)
+    plan_source: str = "measured"
 
     def __post_init__(self):
         object.__setattr__(self, "freq_options",
@@ -107,6 +113,18 @@ class WorkflowConfig:
         ):
             raise ValueError(
                 "store_path/shard_callback require the 'shared' scheduler"
+            )
+        if self.plan_source not in ("measured", "static", "static+verify"):
+            raise ValueError(f"unknown plan_source {self.plan_source!r}")
+        if self.plan_source == "static" and self.store_path is not None:
+            raise ValueError(
+                "plan_source='static' runs no campaigns; store_path is "
+                "meaningless there"
+            )
+        if self.plan_source == "static+verify" and self.region_measure != "isolated":
+            raise ValueError(
+                "plan_source='static+verify' prunes per-region campaigns and "
+                "requires region_measure='isolated'"
             )
 
     def replace(self, **overrides) -> "WorkflowConfig":
@@ -126,7 +144,7 @@ class WorkflowConfig:
         from .faults import PowerFail
 
         fault = self.fault_model if self.fault_model is not None else PowerFail()
-        return {
+        d = {
             "workflow_store_version": WORKFLOW_STORE_VERSION,
             "app": app.name,
             "state_digest": baseline_tester._state_digest(),
@@ -140,6 +158,10 @@ class WorkflowConfig:
             "block_bytes": int(self.cache.block_bytes),
             "fault": fault.spec(),
         }
+        # only when non-default, so every historical fingerprint is unchanged
+        if self.plan_source != "measured":
+            d["plan_source"] = str(self.plan_source)
+        return d
 
 
 @dataclass(frozen=True)
@@ -345,24 +367,59 @@ class WorkflowOrchestrator:
 @dataclass(frozen=True)
 class WorkflowResult:
     app_name: str
-    baseline_campaign: CampaignResult          # step 1: no persistence
+    baseline_campaign: Optional[CampaignResult]  # step 1 (None for plan_source="static")
     object_scores: List[ObjectScore]           # step 2
     critical: Tuple[str, ...]
-    best_campaign: CampaignResult              # step 3 input: persist everywhere
+    best_campaign: Optional[CampaignResult]    # step 3 input (None for "static")
     region_selection: RegionSelection
     plan: PersistPlan                          # step 4 product
     tau: float
     t_s: float
+    #: provenance + cost of the plan: which source produced it and how many
+    #: crash tests the workflow actually executed to get there
+    plan_source: str = "measured"
+    tests_executed: int = 0
+    #: the :class:`repro.analysis.classify.StaticPlan` evidence, when a
+    #: static plan_source was used (duck-typed: core does not import analysis)
+    static_plan: Optional[object] = None
 
     def summary(self) -> Dict[str, float]:
+        nan = float("nan")
         return {
-            "baseline_recomputability": self.baseline_campaign.recomputability,
-            "best_recomputability": self.best_campaign.recomputability,
+            "baseline_recomputability": (
+                self.baseline_campaign.recomputability
+                if self.baseline_campaign is not None else nan),
+            "best_recomputability": (
+                self.best_campaign.recomputability
+                if self.best_campaign is not None else nan),
             "expected_recomputability": self.region_selection.expected_recomputability,
             "planned_overhead": self.region_selection.total_overhead,
             "n_critical_objects": float(len(self.critical)),
             "n_critical_regions": float(len(self.region_selection.choices)),
             "tau": self.tau,
+            "tests_executed": float(self.tests_executed),
+        }
+
+    def spec(self) -> Dict[str, object]:
+        """JSON-round-trip-safe identity of the workflow outcome."""
+        def _f(x: float):
+            x = float(x)
+            return x if x == x and abs(x) != float("inf") else None
+
+        return {
+            "app": self.app_name,
+            "plan_source": self.plan_source,
+            "critical": list(self.critical),
+            "plan": {
+                "objects": list(self.plan.objects),
+                "region_freq": sorted(
+                    [int(k), int(v)] for k, v in self.plan.region_freq.items()
+                ),
+            },
+            "tau": _f(self.tau),
+            "t_s": _f(self.t_s),
+            "tests_executed": int(self.tests_executed),
+            "summary": {k: _f(v) for k, v in self.summary().items()},
         }
 
     def recompute_profile(self, which: str = "best", fault: Optional[FaultModel] = None):
@@ -381,6 +438,11 @@ class WorkflowResult:
         campaigns = {"best": self.best_campaign, "baseline": self.baseline_campaign}
         if which not in campaigns:
             raise ValueError(f"which={which!r}, expected one of {sorted(campaigns)}")
+        if campaigns[which] is None:
+            raise ValueError(
+                f"workflow ran with plan_source={self.plan_source!r}: no "
+                f"{which!r} campaign was measured"
+            )
         return RecomputeProfile.from_campaign(campaigns[which], fault=fault)
 
 
@@ -549,6 +611,35 @@ def run_workflow(app: IterativeApp, config=None, /, **kwargs) -> WorkflowResult:
     region_measure, fault_model = cfg.region_measure, cfg.fault_model
     tau = tau_threshold(cfg.resolved_system(), t_s=t_s)
 
+    static_plan = None
+    if cfg.plan_source != "measured":
+        # lazy import: core must not import analysis at module load
+        from ..analysis.classify import analyze_app
+
+        static_plan = analyze_app(app, cache=cache, seed=seed)
+
+    if cfg.plan_source == "static":
+        # no campaigns at all: the dataflow classification is the plan
+        sel = static_plan.region_selection(
+            t_s=t_s, tau=tau, freq_options=freq_options
+        )
+        crit = static_plan.persist_objects()
+        plan = PersistPlan(objects=crit, region_freq=sel.plan_freqs())
+        return WorkflowResult(
+            app_name=app.name,
+            baseline_campaign=None,
+            object_scores=[],
+            critical=crit,
+            best_campaign=None,
+            region_selection=sel,
+            plan=plan,
+            tau=tau,
+            t_s=t_s,
+            plan_source="static",
+            tests_executed=0,
+            static_plan=static_plan,
+        )
+
     if cfg.scheduler == "serial":
         runner = _PerCampaignRunner(
             app, cache, fault_model, cfg.n_workers, engine=cfg.engine
@@ -599,6 +690,14 @@ def run_workflow(app: IterativeApp, config=None, /, **kwargs) -> WorkflowResult:
         specs = [CampaignSpec("best", PersistPlan.best(crit, app), seed + 1, n_tests)]
         if region_measure == "isolated":
             per_region_n = max(30, n_tests // 2)
+            # static+verify: only regions whose static classification is
+            # uncertain still get a measurement campaign; confident regions
+            # keep their predicted decision.  Seeds stay seed+2+k so any
+            # campaign that does run is bit-identical to the full workflow's.
+            region_ids = (
+                static_plan.uncertain_regions() if static_plan is not None
+                else list(range(n_regions))
+            )
             specs += [
                 CampaignSpec(
                     f"region:{k}",
@@ -606,7 +705,7 @@ def run_workflow(app: IterativeApp, config=None, /, **kwargs) -> WorkflowResult:
                     seed + 2 + k,
                     per_region_n,
                 )
-                for k in range(n_regions)
+                for k in region_ids
             ]
         campaigns = runner.run(specs)
         best = campaigns["best"]
@@ -621,11 +720,24 @@ def run_workflow(app: IterativeApp, config=None, /, **kwargs) -> WorkflowResult:
             ]
             sel = select_regions(a, c_base, c_max, l, t_s=t_s, tau=tau, freq_options=freq_options)
         else:
+            decisions = (
+                {r.index: r.decision for r in static_plan.regions}
+                if static_plan is not None else {}
+            )
             gains = {}
             overheads = {}
             for k in range(n_regions):
-                camp_k = campaigns[f"region:{k}"]
-                gains[k] = camp_k.recomputability - baseline.recomputability
+                camp_k = campaigns.get(f"region:{k}")
+                if camp_k is not None:
+                    gains[k] = camp_k.recomputability - baseline.recomputability
+                elif decisions.get(k) == "persist":
+                    # confident static persist: the best campaign's headroom
+                    # is the gain flushing every iteration at one region can
+                    # at most realize — the same quantity the measured
+                    # isolated campaign estimates
+                    gains[k] = best.recomputability - baseline.recomputability
+                else:
+                    gains[k] = 0.0  # confident static skip: no gain, DP drops it
                 overheads[k] = l[k]
             sel = select_regions_from_gains(
                 gains, overheads, baseline.recomputability, t_s=t_s, tau=tau,
@@ -634,6 +746,9 @@ def run_workflow(app: IterativeApp, config=None, /, **kwargs) -> WorkflowResult:
     finally:
         runner.close()
 
+    executed = baseline.n + best.n + sum(
+        c.n for key, c in campaigns.items() if key.startswith("region:")
+    )
     plan = PersistPlan(objects=crit, region_freq=sel.plan_freqs())
     return WorkflowResult(
         app_name=app.name,
@@ -645,4 +760,7 @@ def run_workflow(app: IterativeApp, config=None, /, **kwargs) -> WorkflowResult:
         plan=plan,
         tau=tau,
         t_s=t_s,
+        plan_source=cfg.plan_source,
+        tests_executed=int(executed),
+        static_plan=static_plan,
     )

@@ -33,6 +33,12 @@ class MonteCarloApp(IterativeApp):
     name = "montecarlo"
     candidates = ("counts", "sums", "k")
 
+    def static_hints(self):
+        # the tally regions are host-side (untraceable), but the algorithm
+        # fact is declarative: verification is an exact golden match and the
+        # tallies accumulate, so a replayed iteration double-counts
+        return {"counts": "exact-accumulator", "sums": "exact-accumulator"}
+
     def __init__(self, batch: int = 8192, nbins: int = 10, n_iters: int = 24, seed: int = 0):
         self.batch = batch
         self.nbins = nbins

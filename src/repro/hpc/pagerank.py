@@ -146,6 +146,22 @@ class PageRankApp(IterativeApp):
     # hooks stack only the per-lane vectors and close over lane 0's links.
     supports_batched_step = True
 
+    def batched_kernels(self):
+        from ..core.regions import BatchedKernel
+
+        s = self.init(0)
+        links = jnp.asarray(s["links"])
+        r3 = np.stack([s["rank"]] * 3)
+        y3 = np.stack([s["y"]] * 3)
+        d = self.damping
+        return (
+            BatchedKernel("spmv_batch", lambda rb: _spmv_batch(links, rb),
+                          (r3,), {0: 0}),
+            BatchedKernel("damped_batch",
+                          lambda yb, rb: _damped_batch(yb, rb, d),
+                          (y3, r3), {0: 0, 1: 0}),
+        )
+
     def run_iteration_batch(self, states):
         rank_rows = np.stack([s["rank"] for s in states])
         links = jnp.asarray(states[0]["links"])

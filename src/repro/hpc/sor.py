@@ -154,6 +154,21 @@ class SORApp(IterativeApp):
     # ------------------------------------------------------- batched recompute
     supports_batched_step = True
 
+    def batched_kernels(self):
+        from ..core.regions import BatchedKernel
+
+        s = self.init(0)
+        u3 = np.stack([s["u"]] * 3)
+        b3 = np.stack([s["b"]] * 3)
+        g, om, pairs = self.grid, self.omega, self.pairs_per_iter
+        return (
+            BatchedKernel("lap_batch", lambda ub: _lap_batch(ub, g),
+                          (u3,), {0: 0}),
+            BatchedKernel("rb_sor_batch",
+                          lambda ub, bb: _rb_sor_batch(ub, bb, g, om, pairs),
+                          (u3, b3), {0: 0, 1: 0}),
+        )
+
     def _residuals_batch(self, states) -> list:
         """rel_residual per lane with one batched Laplacian dispatch; the
         norms run in NumPy per contiguous row, exactly like the serial path."""

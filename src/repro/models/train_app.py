@@ -197,6 +197,17 @@ class LMTrainApp(IterativeApp):
     # test in tests/test_model_apps.py).
     supports_batched_step = True
 
+    def batched_kernels(self):
+        from ..core.regions import BatchedKernel
+
+        s = self.init(0)
+        vecs = np.stack([s["params"]] * 2)
+        its = np.zeros(2, np.int32)
+        return (
+            BatchedKernel("vgrad_batch", self._vgrad_batch,
+                          (vecs, its), {0: 0, 1: 0}),
+        )
+
     def run_iteration_batch(self, states):
         vecs = np.stack([s["params"] for s in states])
         its = np.asarray([int(s["k"][0]) for s in states], np.int32)

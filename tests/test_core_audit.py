@@ -1,0 +1,121 @@
+"""Static API audits: every ``*Config``/``*Result`` exported from
+``repro.core`` is a frozen dataclass exposing ``spec()``, and the shared
+window-trace cache behaves at its cap edge cases."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.core as core
+import repro.core.trace_cache as tc
+from repro.core import CacheConfig, CrashTester, PersistPlan
+from repro.core.trace_cache import WindowTraceCache, shared_trace_cache
+from repro.hpc.suite import ci_app
+
+
+AUDITED = sorted(
+    n for n in core.__all__ if n.endswith("Config") or n.endswith("Result")
+)
+
+
+def test_audit_covers_the_expected_surface():
+    # additions are welcome; silent removals from the audit are not
+    assert {"CacheConfig", "CampaignResult", "SystemConfig", "SimResult",
+            "FleetConfig", "FleetResult", "WorkflowConfig", "WorkflowResult",
+            "VerifyResult"} <= set(AUDITED)
+
+
+@pytest.mark.parametrize("name", AUDITED)
+def test_config_result_frozen_with_spec(name):
+    cls = getattr(core, name)
+    assert dataclasses.is_dataclass(cls), f"{name} is not a dataclass"
+    assert cls.__dataclass_params__.frozen, f"{name} is not frozen"
+    assert callable(getattr(cls, "spec", None)), f"{name} has no spec()"
+
+
+def test_campaign_result_spec_is_json_and_frozen():
+    import json
+
+    app = ci_app("kmeans")
+    camp = CrashTester(app, PersistPlan.none(), CacheConfig(), seed=0
+                       ).run_campaign(6)
+    d = json.loads(json.dumps(camp.spec()))
+    assert d["app"] == "kmeans" and d["n_tests"] == 6
+    assert set(d["class_fractions"]) == {"S1", "S2", "S3", "S4"}
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        camp.golden_iters = 99
+
+
+# ------------------------------------------------------------- trace cache
+@pytest.fixture
+def fresh_shared():
+    """Snapshot/restore the process-shared cache around env manipulation."""
+    old = tc._SHARED
+    tc._SHARED = None
+    yield
+    tc._SHARED = old
+
+
+def test_trace_cache_env_zero_disables(fresh_shared, monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE_CACHE", "0")
+    cache = shared_trace_cache()
+    assert cache.max_traces == 0 and cache.max_payloads == 0
+    cache.put_trace(("k",), ("t", {}, 0))
+    cache.put_payload(("k",), tc.WindowPayload({}, {}, ()))
+    s = cache.stats()
+    assert s["traces"] == 0 and s["payloads"] == 0
+    # a campaign through the disabled cache is still bit-identical
+    app = ci_app("kmeans")
+    disabled = CrashTester(app, PersistPlan.none(), CacheConfig(), seed=0,
+                           trace_cache=cache).run_campaign(5)
+    normal = CrashTester(ci_app("kmeans"), PersistPlan.none(), CacheConfig(),
+                         seed=0, trace_cache=WindowTraceCache()).run_campaign(5)
+    assert [r.outcome for r in disabled.records] == \
+           [r.outcome for r in normal.records]
+    assert cache.stats()["traces"] == 0  # still nothing retained
+
+
+def test_trace_cache_env_garbage_falls_back(fresh_shared, monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE_CACHE", "not-a-number")
+    cache = shared_trace_cache()
+    assert cache.max_traces == 128 and cache.max_payloads == 32
+
+
+def test_trace_cache_cap_one_is_lru(fresh_shared, monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE_CACHE", "1")
+    cache = shared_trace_cache()
+    assert cache.max_traces == 1
+    cache.put_trace(("a",), ("ta", {}, 0))
+    cache.put_trace(("b",), ("tb", {}, 0))
+    assert cache.get_trace(("a",)) is None        # evicted by cap=1
+    assert cache.get_trace(("b",)) == ("tb", {}, 0)
+    # re-put of the survivor refreshes, not duplicates
+    cache.put_trace(("b",), ("tb", {}, 0))
+    assert cache.stats()["traces"] == 1
+    assert cache.stats()["hits"] == 1 and cache.stats()["misses"] == 1
+
+
+def test_trace_cache_payload_cap_independent():
+    cache = WindowTraceCache(max_traces=8, max_payloads=1)
+    p1 = tc.WindowPayload({0: {"u": np.zeros(2)}}, {"u": 1}, ((0, 0, 0),))
+    p2 = tc.WindowPayload({1: {"u": np.ones(2)}}, {"u": 1}, ((1, 1, 0),))
+    cache.put_payload(("p1",), p1)
+    cache.put_trace(("t1",), ("x", {}, 0))
+    cache.put_payload(("p2",), p2)                # evicts p1, not t1
+    assert cache.get_payload(("p1",)) is None
+    assert cache.get_payload(("p2",)) is p2
+    assert cache.get_trace(("t1",)) == ("x", {}, 0)
+    s = cache.stats()
+    assert s["payloads"] == 1 and s["traces"] == 1
+    assert s["payload_hits"] == 1 and s["payload_misses"] == 1
+
+
+def test_trace_cache_app_tokens_never_reused():
+    cache = WindowTraceCache()
+    a1, a2 = ci_app("kmeans"), ci_app("kmeans")
+    t1, t2 = cache.app_token(a1), cache.app_token(a2)
+    assert t1 != t2
+    assert cache.app_token(a1) == t1              # stable per live object
+    del a1
+    a3 = ci_app("kmeans")
+    assert cache.app_token(a3) not in (t1,)       # ids are monotonic

@@ -1,0 +1,107 @@
+"""Bitwise-batchability determinism lint: the known-bad vmapped matmul is
+flagged, the sanctioned lax.map form passes, and every shipped batched
+kernel in the registry is clean."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.analysis import LintFinding, lint_app, lint_batched_fn
+from repro.analysis.lint import run_determinism_lint
+from repro.hpc.suite import app_names, get_app
+
+A = np.arange(16, dtype=np.float32).reshape(4, 4) / 16.0
+U = np.ones((3, 4), np.float32)
+
+
+def test_vmapped_matmul_flagged():
+    """The violation that motivated the lint: vmap turns the per-lane matvec
+    into one batched GEMM with a different reduction tiling."""
+    findings = lint_batched_fn(
+        "bad/vmap_matmul", jax.vmap(lambda u: A @ u), (U,), {0: 0})
+    assert findings, "vmapped matmul must be flagged"
+    assert any(f.primitive == "dot_general" for f in findings)
+    assert all(isinstance(f, LintFinding) for f in findings)
+
+
+def test_lax_map_matmul_passes():
+    """lax.map runs the serial matvec once per lane — bitwise-safe."""
+    findings = lint_batched_fn(
+        "good/map_matmul", lambda ub: lax.map(lambda u: A @ u, ub), (U,), {0: 0})
+    assert findings == []
+
+
+def test_cross_lane_reduction_flagged():
+    findings = lint_batched_fn(
+        "bad/cross_lane_sum", lambda ub: jnp.sum(ub, axis=0), (U,), {0: 0})
+    assert any(f.primitive == "reduce_sum" and "lane axis" in f.reason
+               for f in findings)
+
+
+def test_per_lane_reduction_passes():
+    findings = lint_batched_fn(
+        "good/per_lane_sum", lambda ub: jnp.sum(ub, axis=1), (U,), {0: 0})
+    assert findings == []
+
+
+def test_matmul_inside_vmapped_loop_flagged():
+    """A vmapped fori_loop is recursed into, not waved through: a matmul in
+    its body is still caught."""
+    def body(u):
+        return lax.fori_loop(0, 3, lambda _, x: jnp.tanh(A @ x), u)
+
+    findings = lint_batched_fn(
+        "bad/vmap_loop_matmul", jax.vmap(body), (U,), {0: 0})
+    assert any(f.primitive == "dot_general" for f in findings)
+
+
+def test_vmapped_elementwise_loop_passes():
+    """Lane-carrying scan consts/carry from a vmapped loop are fine as long
+    as the body stays elementwise per lane."""
+    b = np.full((3, 4), 0.5, np.float32)
+
+    def body(u, bb):
+        return lax.fori_loop(0, 3, lambda _, x: jnp.tanh(x) + bb, u)
+
+    findings = lint_batched_fn(
+        "good/vmap_loop_elementwise", jax.vmap(body), (U, b), {0: 0, 1: 0})
+    assert findings == []
+
+
+def test_all_shipped_batched_apps_pass():
+    """Every supports_batched_step app must declare kernels and lint clean —
+    the vectorized engine's bitwise contract, enforced statically."""
+    checked = 0
+    for name in app_names():
+        app = get_app(name)
+        if not app.supports_batched_step:
+            continue
+        kernels = app.batched_kernels()
+        assert kernels, f"{name}: supports_batched_step but no batched_kernels()"
+        for kname, findings in lint_app(app).items():
+            assert findings == [], f"{name}/{kname}: {findings}"
+            checked += 1
+    assert checked >= 5
+
+
+def test_cli_passes_on_shipped_apps(capsys):
+    assert run_determinism_lint() == 0
+    out = capsys.readouterr().out
+    assert "kernels checked, 0 findings" in out
+
+
+def test_cli_flags_missing_kernels():
+    class FakeApp:
+        name = "fake"
+        supports_batched_step = True
+
+        @staticmethod
+        def batched_kernels():
+            return ()
+
+    with pytest.MonkeyPatch.context() as mp:
+        import repro.hpc.suite as suite
+        mp.setattr(suite, "get_app", lambda name, **kw: FakeApp())
+        assert run_determinism_lint(["fake"]) == 1
