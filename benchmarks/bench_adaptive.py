@@ -1,0 +1,197 @@
+"""Adaptive crash-campaign scheduler vs the brute-force W+2 workflow.
+
+The tests-saved-per-app report: for every suite app, the brute-force
+workflow total (golden in the default mode, re-measured with ``--full``)
+against two adaptive runs —
+
+* ``exact`` — uniform sampler (``sampler_bias=0``): draws bit-identical
+  to brute force, so the final plan must match on EVERY app (asserted);
+* ``default`` — the importance sampler at its default tilt: unbiased for
+  the same rates but different finite-sample draws, so knife-edge
+  knapsack decisions may resolve differently (>= 6/7 asserted).
+
+Acceptance bars asserted here (not just reported): adaptive plan equals
+brute force on >= 6/7 apps at the default config (7/7 exact), >= 40%
+fewer executed crash tests on >= 3 apps, and byte-identical workflow
+results at worker counts {1, 2, 4}.
+
+``--smoke`` is the CI fast-gate subset: sor + pagerank only — early
+stopping must fire and the plan must match the pinned brute-force plan.
+The scheduled job runs the default mode and uploads
+``BENCH_adaptive.json`` plus ``results/adaptive.csv``.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from .common import APPS, emit
+
+BENCH_JSON = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_adaptive.json")
+)
+GOLDEN = os.path.join(
+    os.path.dirname(__file__), "..", "tests", "golden", "static_agreement.json"
+)
+
+MIN_PLAN_MATCHES = 6      # of 7, default (IS) config; exact must be 7/7
+MIN_SAVED_APPS = 3        # apps clearing MIN_SAVED_FRAC
+MIN_SAVED_FRAC = 0.40
+N_TESTS = 40              # the golden oracle size
+WORKER_COUNTS = (1, 2, 4)
+
+
+def _configs():
+    from repro.core import SequentialConfig, WorkflowConfig
+
+    def cfg(cache, **kw):
+        return WorkflowConfig(n_tests=N_TESTS, seed=0, cache=cache,
+                              plan_source="adaptive", **kw)
+
+    return cfg, SequentialConfig
+
+
+def _brute(name: str, fast: bool) -> Dict[str, object]:
+    if fast:
+        with open(GOLDEN) as f:
+            g = json.load(f)[name]
+        return {"tests": int(g["n_tests_total"]),
+                "region_freq": dict(g["region_freq"]),
+                "critical": tuple(g["critical"])}
+    from repro.core import WorkflowConfig, run_workflow
+    from repro.hpc.suite import ci_app, default_cache
+
+    app = ci_app(name)
+    wf = run_workflow(app, WorkflowConfig(
+        n_tests=N_TESTS, seed=0, cache=default_cache(app)))
+    return {"tests": wf.tests_executed,
+            "region_freq": {str(k): v for k, v in wf.plan.region_freq.items()},
+            "critical": wf.critical}
+
+
+def adaptive_rows(apps, fast: bool) -> List[Dict[str, object]]:
+    from repro.core import run_workflow
+    from repro.hpc.suite import ci_app, default_cache
+
+    cfg, SequentialConfig = _configs()
+    rows: List[Dict[str, object]] = []
+    for name in apps:
+        brute = _brute(name, fast)
+        app = ci_app(name)
+        cache = default_cache(app)
+        exact = run_workflow(app, cfg(
+            cache, stopping=SequentialConfig(sampler_bias=0.0)))
+        default = run_workflow(app, cfg(cache))
+        for label, wf in (("exact", exact), ("default", default)):
+            freq = {str(k): v for k, v in wf.plan.region_freq.items()}
+            rows.append({
+                "app": name,
+                "sampler": label,
+                "brute_tests": brute["tests"],
+                "adaptive_tests": wf.tests_executed,
+                "tests_saved_frac": round(
+                    1 - wf.tests_executed / brute["tests"], 4),
+                "plan_match": freq == brute["region_freq"]
+                and wf.plan.objects == tuple(brute["critical"]),
+                "stopped_early": wf.adaptive.stopped_early,
+                "rounds": f"{wf.adaptive.rounds_executed}/"
+                          f"{wf.adaptive.rounds_total}",
+                "plan": "|".join(f"{k}:{v}" for k, v in sorted(freq.items())),
+            })
+    return rows
+
+
+def worker_identity_rows() -> List[Dict[str, object]]:
+    """kmeans, workers {1,2,4}: the workflow spec (every campaign record,
+    the plan, the adaptive report) must be byte-identical."""
+    from repro.core import run_workflow
+    from repro.hpc.suite import ci_app, default_cache
+
+    cfg, _ = _configs()
+    app = ci_app("kmeans")
+    cache = default_cache(app)
+    specs = {}
+    for w in WORKER_COUNTS:
+        wf = run_workflow(app, cfg(cache, n_workers=w))
+        specs[w] = json.dumps(wf.spec(), sort_keys=True)
+    identical = len(set(specs.values())) == 1
+    assert identical, "adaptive workflow diverged across worker counts"
+    return [{
+        "app": "kmeans",
+        "workers": "|".join(map(str, WORKER_COUNTS)),
+        "byte_identical": identical,
+        "spec_bytes": len(specs[1]),
+    }]
+
+
+def run(fast: bool = True, smoke: bool = False) -> None:
+    apps = ("sor", "pagerank") if smoke else APPS
+    rows = adaptive_rows(apps, fast=fast or smoke)
+    emit(rows, "adaptive")
+    exact_rows = [r for r in rows if r["sampler"] == "exact"]
+    if smoke:
+        for r in exact_rows:
+            if not r["stopped_early"]:
+                raise SystemExit(
+                    f"adaptive smoke: early stop never fired on {r['app']}")
+            if not r["plan_match"]:
+                raise SystemExit(
+                    f"adaptive smoke: plan diverged from brute force on "
+                    f"{r['app']}: {r['plan']}")
+        print(f"[adaptive] smoke ok: early stop + plan match on {apps}")
+        return
+
+    n_exact = sum(bool(r["plan_match"]) for r in exact_rows)
+    if n_exact != len(exact_rows):
+        raise SystemExit(
+            f"exact adaptive != brute force: {n_exact}/{len(exact_rows)}")
+    default_rows = [r for r in rows if r["sampler"] == "default"]
+    n_default = sum(bool(r["plan_match"]) for r in default_rows)
+    if n_default < MIN_PLAN_MATCHES:
+        raise SystemExit(
+            f"default adaptive plan agreement regressed: "
+            f"{n_default}/{len(default_rows)} (bar: {MIN_PLAN_MATCHES})")
+    saved = [r["app"] for r in default_rows
+             if r["tests_saved_frac"] >= MIN_SAVED_FRAC]
+    if len(saved) < MIN_SAVED_APPS:
+        raise SystemExit(
+            f"adaptive saved >= {MIN_SAVED_FRAC:.0%} on only {saved} "
+            f"(bar: {MIN_SAVED_APPS} apps)")
+    workers = worker_identity_rows()
+    emit(workers, "adaptive_workers")
+
+    doc = {
+        "n_tests": N_TESTS,
+        "apps": rows,
+        "workers": workers,
+        "bars": {
+            "exact_plan_matches": f"{n_exact}/{len(exact_rows)}",
+            "default_plan_matches": f"{n_default}/{len(default_rows)}",
+            "apps_saving_40pct": saved,
+        },
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"[adaptive] wrote {BENCH_JSON}")
+    print(f"[adaptive] exact {n_exact}/{len(exact_rows)} default "
+          f"{n_default}/{len(default_rows)} >=40% saved on {saved}")
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="re-measure the brute-force workflows instead of "
+                         "comparing against the pinned goldens")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast gate: sor + pagerank, early stop + plan "
+                         "match only")
+    args = ap.parse_args()
+    run(fast=not args.full, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

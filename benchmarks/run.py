@@ -8,6 +8,8 @@
   bench_selection       — Fig 4a/4b + Fig 5
   bench_static_plan     — static analyzer vs measured plans: agreement table
                           + static+verify tests-saved on sor
+  bench_adaptive        — adaptive scheduler vs brute force: tests-saved per
+                          app + plan-equivalence bars (BENCH_adaptive.json)
   bench_persist_overhead— Table 4
   bench_nvm_writes      — Fig 9
   bench_efficiency      — Fig 10 + Fig 11 (closed-form model)
@@ -67,6 +69,7 @@ def main() -> None:
     fast = not args.full
 
     from . import (
+        bench_adaptive,
         bench_campaign_hotpath,
         bench_efficiency,
         bench_fleetsim,
@@ -90,6 +93,7 @@ def main() -> None:
         ("robustness_matrix", bench_recomputability.robustness_matrix),
         ("workflow_orchestrator", bench_workflow.run),
         ("static_plan", bench_static_plan.run),
+        ("adaptive", bench_adaptive.run),
         ("selection", bench_selection.run),
         ("persist_overhead", bench_persist_overhead.run),
         ("nvm_writes", bench_nvm_writes.run),

@@ -108,6 +108,19 @@ class StaticPlan:
         return [r.index for r in self.regions
                 if r.confidence < self.confidence_threshold]
 
+    def window_confidences(self) -> Tuple[float, ...]:
+        """Per-region decision confidence, indexed by region position.
+
+        Crash times inside an iteration's window map 1:1 onto code regions
+        (:meth:`~repro.core.crash_tester.CrashTester.region_time_spans`), so
+        this vector is the per-*window* prior the adaptive scheduler's
+        importance sampler tilts crash-point draws with: low confidence ->
+        more samples land there.
+        """
+        return tuple(
+            r.confidence for r in sorted(self.regions, key=lambda r: r.index)
+        )
+
     def write_traffic_bytes(self) -> int:
         return sum(r.write_bytes for r in self.regions)
 

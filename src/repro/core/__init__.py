@@ -5,6 +5,18 @@ Emulation/characterization layer (paper §3–5):
 Production layer (paper §5.3 step 4 + §7):
   manager (flush runtime), efficiency (system model)
 """
+from .adaptive import (
+    AdaptiveReport,
+    RegionEvidence,
+    SequentialConfig,
+    StaticPriorSampler,
+    effective_sample_size,
+    final_rate_interval,
+    selection_invariant,
+    shard_rounds,
+    weighted_outcome_stats,
+    wilson_interval,
+)
 from .arena import NVMArena, WriteStats
 from .blocks import (
     DEFAULT_BLOCK_BYTES,
@@ -101,6 +113,7 @@ from .regions import BatchedKernel, IterativeApp, Region, State, VerifyResult
 from .selection import select_objects, select_regions, spearman
 from .workflow import (
     CampaignSpec,
+    RoundsResult,
     WorkflowConfig,
     WorkflowOrchestrator,
     WorkflowResult,
@@ -136,5 +149,9 @@ __all__ = [
     "unflatten_state", "BatchedKernel", "IterativeApp", "Region", "State",
     "VerifyResult",
     "select_objects", "select_regions", "spearman",
-    "CampaignSpec", "WorkflowConfig", "WorkflowOrchestrator", "WorkflowResult", "run_workflow",
+    "CampaignSpec", "RoundsResult", "WorkflowConfig", "WorkflowOrchestrator",
+    "WorkflowResult", "run_workflow",
+    "AdaptiveReport", "RegionEvidence", "SequentialConfig", "StaticPriorSampler",
+    "effective_sample_size", "final_rate_interval", "selection_invariant",
+    "shard_rounds", "weighted_outcome_stats", "wilson_interval",
 ]

@@ -244,10 +244,22 @@ class WorkflowArtifact:
     cache: Optional[CacheConfig]
     fingerprint: str
     plan_source: str = "measured"
+    #: the sequential scheduler's stopping decision + per-region evidence
+    #: (an :meth:`repro.core.adaptive.AdaptiveReport.to_payload` document),
+    #: present only for adaptively-run workflows
+    adaptive: Optional[Dict[str, object]] = None
 
     @property
     def fault(self) -> FaultModel:
         return fault_model_from_spec(self.fault_spec)
+
+    def adaptive_report(self):
+        """Rehydrated :class:`~repro.core.adaptive.AdaptiveReport` (or None)."""
+        if self.adaptive is None:
+            return None
+        from .adaptive import AdaptiveReport
+
+        return AdaptiveReport.from_payload(self.adaptive)
 
 
 def save_workflow(
@@ -300,6 +312,11 @@ def save_workflow(
     plan_source = getattr(wf, "plan_source", "measured")
     if plan_source != "measured":
         payload["plan_source"] = str(plan_source)
+    adaptive = getattr(wf, "adaptive", None)
+    if adaptive is not None:
+        # stopping decision, weights/evidence, sampler spec — the envelope
+        # records *why* the adaptive plan is trustworthy, not just the plan
+        payload["adaptive"] = adaptive.to_payload()
     return _write_envelope(path, WORKFLOW_KIND, payload)
 
 
@@ -322,6 +339,10 @@ def load_workflow(path: str) -> WorkflowArtifact:
         cache=cache_from_payload(payload.get("cache")),
         fingerprint=fp,
         plan_source=str(payload.get("plan_source", "measured")),
+        adaptive=(
+            dict(payload["adaptive"]) if payload.get("adaptive") is not None
+            else None
+        ),
     )
 
 

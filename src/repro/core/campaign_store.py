@@ -43,7 +43,12 @@ class CampaignStoreError(RuntimeError):
 
 
 def record_to_dict(record: CrashRecord) -> dict:
-    return dataclasses.asdict(record)
+    d = dataclasses.asdict(record)
+    # unit importance weight is the (historical) default: elide it, so every
+    # uniform campaign's stored lines are byte-identical to pre-weight stores
+    if d.get("weight") == 1.0:
+        d.pop("weight")
+    return d
 
 
 def record_from_dict(d: Mapping[str, object]) -> CrashRecord:
@@ -55,6 +60,7 @@ def record_from_dict(d: Mapping[str, object]) -> CrashRecord:
         outcome=str(d["outcome"]),
         extra_iters=int(d["extra_iters"]),
         verify_metric=float(d["verify_metric"]),
+        weight=float(d.get("weight", 1.0)),
     )
 
 

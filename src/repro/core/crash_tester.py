@@ -104,6 +104,10 @@ class CrashRecord:
     outcome: str          # "S1" | "S2" | "S3" | "S4"
     extra_iters: int
     verify_metric: float
+    #: importance weight of the test that produced this record (1.0 for the
+    #: historical uniform draw); self-normalized estimators divide by the
+    #: weight sum, so uniform campaigns are numerically unchanged
+    weight: float = 1.0
 
 
 @dataclass(frozen=True)
@@ -116,12 +120,19 @@ class PlannedTest:
     bit-flip / recovery-crash decisions), pre-drawn by the planner for models
     that need it; 0 for the default :class:`~repro.core.faults.PowerFail`,
     whose planning draws are exactly the historical two per test.
+
+    ``weight`` is the importance weight when the campaign's crash points
+    were drawn from a biased proposal (``CrashTester(sampler=...)``): the
+    uniform-over-proposal likelihood ratio, 1.0 for the historical uniform
+    draw.  It rides into the :class:`CrashRecord` so stores and estimators
+    see it.
     """
 
     index: int        # position in the campaign (stable output ordering)
     crash_iter: int   # iteration whose window the crash falls in
     crash_t: int      # crash time inside the window, in block accesses
     fault_seed: int = 0
+    weight: float = 1.0
 
 
 @dataclass(frozen=True)
@@ -160,9 +171,34 @@ class CampaignResult:
             out[r.outcome] += 1
         return {c: v / max(1, self.n) for c, v in out.items()}
 
+    def weighted_class_fractions(self) -> Dict[str, float]:
+        """Self-normalized IS estimate of the S1–S4 rates: sum of record
+        weights per class over the total weight.  For a uniform campaign
+        (all weights 1.0) this is exactly :meth:`class_fractions`."""
+        out = {c: 0.0 for c in ("S1", "S2", "S3", "S4")}
+        total = 0.0
+        for r in self.records:
+            out[r.outcome] += r.weight
+            total += r.weight
+        if total <= 0.0:
+            return {c: 0.0 for c in out}
+        return {c: v / total for c, v in out.items()}
+
     @property
     def recomputability(self) -> float:
         return self.class_fractions()["S1"]
+
+    @property
+    def weighted_recomputability(self) -> float:
+        """S1 rate under the self-normalized IS estimator (== plain
+        :attr:`recomputability` for uniform weights)."""
+        return self.weighted_class_fractions()["S1"]
+
+    def effective_n(self) -> float:
+        """Kish effective sample size of the campaign's weights."""
+        w = np.array([r.weight for r in self.records], dtype=float)
+        s2 = float(np.sum(w * w))
+        return float(np.sum(w)) ** 2 / s2 if s2 > 0.0 else 0.0
 
     def per_region_recomputability(self) -> Dict[int, Tuple[float, int]]:
         """region_idx -> (recomputability c_k, sample count)."""
@@ -194,6 +230,7 @@ class CrashTester:
         fault: Optional[FaultModel] = None,
         engine: Optional[str] = None,
         trace_cache: Optional[WindowTraceCache] = None,
+        sampler=None,
     ):
         """``engine`` selects the campaign hot path — ``"vec"`` (SoA window
         simulator, batched recompute for apps with ``supports_batched_step``)
@@ -203,13 +240,21 @@ class CrashTester:
         ``trace_cache`` is the cross-campaign window cache; ``None`` uses the
         process-shared one (:func:`~repro.core.trace_cache.shared_trace_cache`).
         Pass a private :class:`~repro.core.trace_cache.WindowTraceCache` to
-        isolate a tester (benchmarks measuring cold paths do)."""
+        isolate a tester (benchmarks measuring cold paths do).
+
+        ``sampler`` replaces the fault model's crash-point draw with an
+        importance-sampled one (duck-typed:
+        ``draw(rng, planner) -> (crash_iter, crash_t, weight)`` plus a
+        JSON-safe ``spec()``; see
+        :class:`~repro.core.adaptive.StaticPriorSampler`).  Planning-only:
+        workers executing pre-drawn shards never consult it."""
         self.app = app
         self.plan = plan
         self.cache = cache
         self.seed = seed
         self.max_extra_factor = max_extra_factor
         self.fault = fault if fault is not None else PowerFail()
+        self.sampler = sampler
         self.engine = engine if engine is not None else default_engine()
         if self.engine not in ENGINES:
             raise ValueError(f"unknown engine {self.engine!r}; have {ENGINES}")
@@ -448,14 +493,20 @@ class CrashTester:
     def _draw_test(self, rng: np.random.Generator, index: int) -> PlannedTest:
         """One planned test via the fault model's crash-point hook; models
         that need per-test entropy get a fault seed drawn *after* the crash
-        point, so the default model's draw stream stays the historical one."""
-        crash_iter, crash_t = self.fault.draw_crash_point(rng, self)
+        point, so the default model's draw stream stays the historical one.
+        An attached ``sampler`` takes over the crash-point draw (and supplies
+        the importance weight); the fault model keeps its other hooks."""
+        if self.sampler is not None:
+            crash_iter, crash_t, weight = self.sampler.draw(rng, self)
+        else:
+            crash_iter, crash_t = self.fault.draw_crash_point(rng, self)
+            weight = 1.0
         fault_seed = (
             int(rng.integers(0, np.iinfo(np.int64).max))
             if self.fault.uses_test_entropy
             else 0
         )
-        return PlannedTest(index, crash_iter, crash_t, fault_seed)
+        return PlannedTest(index, crash_iter, crash_t, fault_seed, weight)
 
     def plan_campaign(self, n_tests: int, seed: Optional[int] = None) -> List[PlannedTest]:
         """Pre-draw every crash point (and per-test fault entropy) with the
@@ -597,6 +648,7 @@ class CrashTester:
                 outcome=kind,
                 extra_iters=extra,
                 verify_metric=metric,
+                weight=float(item["test"].weight),
             ),
         )
 
@@ -903,7 +955,7 @@ class CrashTester:
         round-trip unchanged (the store compares the parsed header against
         this dict), so: only str/int/float/bool, lists of lists — no tuples.
         """
-        return {
+        fp: Dict[str, object] = {
             "store_version": 1,
             "app": self.app.name,
             "state_digest": self._state_digest(),
@@ -919,6 +971,12 @@ class CrashTester:
             # store with, say, TornWrite would silently mix taxonomies
             "fault": self.fault.spec(),
         }
+        # only when a sampler is attached, so every historical (uniform)
+        # fingerprint is byte-identical — but an importance-sampled store can
+        # never be resumed with different weights (or none at all)
+        if self.sampler is not None:
+            fp["sampler"] = self.sampler.spec()
+        return fp
 
     def _shards(self, tests: Sequence[PlannedTest]) -> Dict[int, List[PlannedTest]]:
         """Group planned tests by crash window; the shard id is the window's

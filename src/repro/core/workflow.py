@@ -31,10 +31,19 @@ import dataclasses
 import warnings
 from concurrent.futures import as_completed
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .adaptive import (
+    AdaptiveReport,
+    RegionEvidence,
+    SequentialConfig,
+    StaticPriorSampler,
+    final_rate_interval,
+    selection_invariant,
+    shard_rounds,
+)
 from .cache_sim import CacheConfig
 from .crash_tester import (
     CampaignResult,
@@ -94,10 +103,18 @@ class WorkflowConfig:
     engine: Optional[str] = None
     #: where the persist plan comes from: ``"measured"`` (the paper's W+2
     #: campaign), ``"static"`` (the jaxpr dataflow prediction, no campaigns
-    #: at all), or ``"static+verify"`` (campaigns only for the regions the
+    #: at all), ``"static+verify"`` (campaigns only for the regions the
     #: static classification is uncertain about; confident decisions are
-    #: taken as-is)
+    #: taken as-is), or ``"adaptive"`` (every region campaigned, but
+    #: importance-sampled from the static priors and early-stopped the
+    #: moment the knapsack decision is settled — see
+    #: :mod:`repro.core.adaptive`)
     plan_source: str = "measured"
+    #: sequential-stopping knobs for the adaptive scheduler.  ``None`` with
+    #: ``plan_source="adaptive"`` resolves to ``SequentialConfig()``; with
+    #: ``"static+verify"`` it turns the surviving (uncertain-region)
+    #: campaigns adaptive too; with any other plan_source it is an error.
+    stopping: Optional[SequentialConfig] = None
 
     def __post_init__(self):
         object.__setattr__(self, "freq_options",
@@ -114,18 +131,39 @@ class WorkflowConfig:
             raise ValueError(
                 "store_path/shard_callback require the 'shared' scheduler"
             )
-        if self.plan_source not in ("measured", "static", "static+verify"):
+        if self.plan_source not in ("measured", "static", "static+verify", "adaptive"):
             raise ValueError(f"unknown plan_source {self.plan_source!r}")
         if self.plan_source == "static" and self.store_path is not None:
             raise ValueError(
                 "plan_source='static' runs no campaigns; store_path is "
                 "meaningless there"
             )
-        if self.plan_source == "static+verify" and self.region_measure != "isolated":
+        if self.plan_source in ("static+verify", "adaptive") and self.region_measure != "isolated":
             raise ValueError(
-                "plan_source='static+verify' prunes per-region campaigns and "
-                "requires region_measure='isolated'"
+                f"plan_source={self.plan_source!r} works on per-region campaigns and "
+                f"requires region_measure='isolated'"
             )
+        if self.stopping is not None and not isinstance(self.stopping, SequentialConfig):
+            raise ValueError(
+                f"stopping must be a SequentialConfig, got "
+                f"{type(self.stopping).__name__}"
+            )
+        if self.stopping is not None and self.plan_source not in ("adaptive", "static+verify"):
+            raise ValueError(
+                "stopping requires plan_source='adaptive' or 'static+verify' "
+                f"(got {self.plan_source!r})"
+            )
+        if self.plan_source == "adaptive" and self.scheduler != "shared":
+            raise ValueError(
+                "plan_source='adaptive' executes deterministic shard rounds "
+                "and requires the 'shared' scheduler"
+            )
+        if (
+            self.plan_source == "static+verify"
+            and self.stopping is not None
+            and self.scheduler != "shared"
+        ):
+            raise ValueError("stopping requires the 'shared' scheduler")
 
     def replace(self, **overrides) -> "WorkflowConfig":
         """A copy with the given fields overridden (re-validated)."""
@@ -133,6 +171,15 @@ class WorkflowConfig:
 
     def resolved_system(self) -> SystemConfig:
         return self.system or SystemConfig(mtbf=12 * 3600.0, t_chk=320.0)
+
+    def adaptive_mode(self) -> bool:
+        """Whether region campaigns run under the sequential scheduler."""
+        return self.plan_source == "adaptive" or (
+            self.plan_source == "static+verify" and self.stopping is not None
+        )
+
+    def resolved_stopping(self) -> SequentialConfig:
+        return self.stopping if self.stopping is not None else SequentialConfig()
 
     def spec(self, app: IterativeApp, baseline_tester: CrashTester) -> Dict[str, object]:
         """Workflow identity (JSON-round-trip safe) for stores + artifacts.
@@ -161,18 +208,57 @@ class WorkflowConfig:
         # only when non-default, so every historical fingerprint is unchanged
         if self.plan_source != "measured":
             d["plan_source"] = str(self.plan_source)
+        if self.adaptive_mode():
+            # the stopping rule changes which shards execute, so it is
+            # workflow identity (resolved, so "adaptive" with stopping=None
+            # and with an explicit default SequentialConfig() are the same
+            # workflow — they are)
+            d["stopping"] = self.resolved_stopping().spec()
         return d
 
 
 @dataclass(frozen=True)
 class CampaignSpec:
     """One campaign of a workflow's task graph, identified by ``key``
-    (``"baseline"``, ``"best"``, ``"region:<k>"``)."""
+    (``"baseline"``, ``"best"``, ``"region:<k>"``).
+
+    ``sampler`` (optional) importance-samples the campaign's crash points
+    at planning time (:class:`~repro.core.adaptive.StaticPriorSampler`);
+    it participates in the campaign's store fingerprint.
+    """
 
     key: str
     plan: PersistPlan
     seed: int
     n_tests: int
+    sampler: Optional[StaticPriorSampler] = None
+
+
+@dataclass(frozen=True)
+class RoundsResult:
+    """What :meth:`WorkflowOrchestrator.run_rounds` executed.
+
+    ``campaigns`` hold each campaign's result over the *executed prefix*
+    only; ``planned``/``executed`` are the full pre-drawn test lists and the
+    tests whose rounds actually ran.
+    """
+
+    campaigns: Dict[str, CampaignResult]
+    planned: Dict[str, List[PlannedTest]]
+    executed: Dict[str, List[PlannedTest]]
+    rounds_executed: int
+    rounds_total: int
+    stopped_early: bool
+
+    def spec(self) -> Dict[str, object]:
+        return {
+            "rounds_executed": self.rounds_executed,
+            "rounds_total": self.rounds_total,
+            "stopped_early": self.stopped_early,
+            "campaigns": {k: c.spec() for k, c in sorted(self.campaigns.items())},
+            "planned": {k: len(v) for k, v in sorted(self.planned.items())},
+            "executed": {k: len(v) for k, v in sorted(self.executed.items())},
+        }
 
 
 class _PerCampaignRunner:
@@ -249,16 +335,16 @@ class WorkflowOrchestrator:
         cached = self._testers.get(spec.key)
         if cached is not None:
             prev, t = cached
-            if (prev.plan, prev.seed) != (spec.plan, spec.seed):
+            if (prev.plan, prev.seed, prev.sampler) != (spec.plan, spec.seed, spec.sampler):
                 raise ValueError(
                     f"campaign key {spec.key!r} already bound to a different "
-                    f"plan/seed in this orchestrator; use a fresh key"
+                    f"plan/seed/sampler in this orchestrator; use a fresh key"
                 )
             return t
         t = CrashTester(
             self.app, spec.plan, self.cache, seed=spec.seed,
             max_extra_factor=self.max_extra_factor, fault=self.fault,
-            engine=self.engine,
+            engine=self.engine, sampler=spec.sampler,
         )
         self._testers[spec.key] = (spec, t)
         return t
@@ -318,6 +404,24 @@ class WorkflowOrchestrator:
                 if ci not in done:
                     pending.append((spec, ci, ts))
 
+        self._execute_pending(pending, results)
+
+        out = {
+            key: self._testers[key][1].assemble_campaign(planned[key][0], results[key])
+            for key in planned
+        }
+        for key in planned:
+            # the campaign is assembled; don't keep W+2 golden trajectories
+            # pinned in the parent for the rest of the workflow
+            self._testers[key][1].release_caches()
+        return out
+
+    def _execute_pending(
+        self,
+        pending: Sequence[Tuple[CampaignSpec, int, List[PlannedTest]]],
+        results: Dict[str, Dict[int, List[Tuple[int, CrashRecord]]]],
+    ) -> None:
+        """Execute pending (campaign, shard) units; land each as it finishes."""
         if self._use_pool(len(pending)):
             ex = self._pool()
             futs = {
@@ -341,15 +445,99 @@ class WorkflowOrchestrator:
                     on_shard=lambda ci, recs, _k=key: self._land(_k, ci, recs, results),
                 )
 
-        out = {
-            key: self._testers[key][1].assemble_campaign(planned[key][0], results[key])
-            for key in planned
+    def run_rounds(
+        self,
+        specs: Sequence[CampaignSpec],
+        round_tests: int,
+        min_rounds: int,
+        should_stop,
+    ) -> "RoundsResult":
+        """Execute campaigns in deterministic barrier rounds with early stop.
+
+        Each campaign's shards are partitioned by
+        :func:`~repro.core.adaptive.shard_rounds` (whole shards, planned-test
+        order, ~``round_tests`` tests per round) — a pure function of the
+        plan.  Round *r* of every campaign executes together (pool or
+        in-process, identical results), lands durably, and then
+        ``should_stop(partial, executed, planned)`` is evaluated on the
+        completed prefix: ``partial`` maps campaign key to the
+        :class:`CampaignResult` over the executed tests so far, ``executed``
+        / ``planned`` map keys to test lists.  Because the executed set
+        after each round — and therefore the stop round — depends only on
+        the completed-round prefix, worker count and kill/resume cannot
+        change any result bit.  Stored shards beyond the stop round (never
+        produced by this scheduler, but a store is append-only) are ignored
+        deterministically.
+        """
+        planned: Dict[str, Tuple[List[PlannedTest], Dict[int, List[PlannedTest]]]] = {}
+        for spec in specs:
+            planned[spec.key] = self.tester(spec).plan_shards(spec.n_tests, spec.seed)
+        stored: Dict[str, Dict[int, List[Tuple[int, CrashRecord]]]] = {}
+        if self.store is not None:
+            stored = self.store.register_campaigns({
+                spec.key: self.tester(spec)._fingerprint(spec.n_tests, spec.seed)
+                for spec in specs
+            })
+        rounds_by_key = {
+            spec.key: shard_rounds(planned[spec.key][0], planned[spec.key][1], round_tests)
+            for spec in specs
         }
-        for key in planned:
-            # the campaign is assembled; don't keep W+2 golden trajectories
-            # pinned in the parent for the rest of the workflow
-            self._testers[key][1].release_caches()
-        return out
+        rounds_total = max((len(r) for r in rounds_by_key.values()), default=0)
+
+        results: Dict[str, Dict[int, List[Tuple[int, CrashRecord]]]] = {
+            spec.key: {} for spec in specs
+        }
+        executed: Dict[str, List[PlannedTest]] = {spec.key: [] for spec in specs}
+        planned_tests = {key: planned[key][0] for key in planned}
+        stopped_early = False
+        rounds_executed = 0
+        for r in range(rounds_total):
+            pending: List[Tuple[CampaignSpec, int, List[PlannedTest]]] = []
+            for spec in specs:
+                rounds_k = rounds_by_key[spec.key]
+                if r >= len(rounds_k):
+                    continue
+                shards = planned[spec.key][1]
+                for ci in rounds_k[r]:
+                    executed[spec.key].extend(shards[ci])
+                    done = stored.get(spec.key, {}).get(ci)
+                    if done is not None:
+                        results[spec.key][ci] = done
+                    else:
+                        pending.append((spec, ci, shards[ci]))
+            self._execute_pending(pending, results)
+            rounds_executed = r + 1
+            if rounds_executed >= min_rounds and rounds_executed < rounds_total:
+                partial = self._assemble_prefix(specs, executed, results)
+                if should_stop(partial, executed, planned_tests):
+                    stopped_early = True
+                    break
+
+        campaigns = self._assemble_prefix(specs, executed, results)
+        for spec in specs:
+            self._testers[spec.key][1].release_caches()
+        return RoundsResult(
+            campaigns=campaigns,
+            planned=planned_tests,
+            executed=executed,
+            rounds_executed=rounds_executed,
+            rounds_total=rounds_total,
+            stopped_early=stopped_early,
+        )
+
+    def _assemble_prefix(
+        self,
+        specs: Sequence[CampaignSpec],
+        executed: Mapping[str, List[PlannedTest]],
+        results: Mapping[str, Dict[int, List[Tuple[int, CrashRecord]]]],
+    ) -> Dict[str, CampaignResult]:
+        return {
+            spec.key: self._testers[spec.key][1].assemble_campaign(
+                sorted(executed[spec.key], key=lambda t: t.index),
+                results[spec.key],
+            )
+            for spec in specs
+        }
 
     def _land(self, key, ci, recs, results) -> None:
         if self.store is not None:
@@ -382,6 +570,9 @@ class WorkflowResult:
     #: the :class:`repro.analysis.classify.StaticPlan` evidence, when a
     #: static plan_source was used (duck-typed: core does not import analysis)
     static_plan: Optional[object] = None
+    #: the sequential scheduler's stopping decision + per-region evidence,
+    #: when the workflow ran adaptively
+    adaptive: Optional[AdaptiveReport] = None
 
     def summary(self) -> Dict[str, float]:
         nan = float("nan")
@@ -420,6 +611,9 @@ class WorkflowResult:
             "t_s": _f(self.t_s),
             "tests_executed": int(self.tests_executed),
             "summary": {k: _f(v) for k, v in self.summary().items()},
+            # only when the workflow ran adaptively: historical specs unchanged
+            **({"adaptive": self.adaptive.to_payload()}
+               if self.adaptive is not None else {}),
         }
 
     def recompute_profile(self, which: str = "best", fault: Optional[FaultModel] = None):
@@ -687,28 +881,155 @@ def run_workflow(app: IterativeApp, config=None, /, **kwargs) -> WorkflowResult:
         n_regions = len(app.regions())
         a = region_time_fractions(app, cache.block_bytes)
         l = estimate_region_overheads(app, crit, block_bytes=cache.block_bytes)
-        specs = [CampaignSpec("best", PersistPlan.best(crit, app), seed + 1, n_tests)]
+        adaptive_mode = cfg.adaptive_mode()
+        stopping = cfg.resolved_stopping() if adaptive_mode else None
+        sampler = None
+        region_ids: List[int] = []
+        region_specs: List[CampaignSpec] = []
+        per_region_n = max(30, n_tests // 2)
         if region_measure == "isolated":
-            per_region_n = max(30, n_tests // 2)
-            # static+verify: only regions whose static classification is
-            # uncertain still get a measurement campaign; confident regions
-            # keep their predicted decision.  Seeds stay seed+2+k so any
-            # campaign that does run is bit-identical to the full workflow's.
-            region_ids = (
-                static_plan.uncertain_regions() if static_plan is not None
-                else list(range(n_regions))
-            )
-            specs += [
+            # which regions get a measurement campaign: "adaptive" campaigns
+            # all of them (cheaply — IS + early stop); static+verify only the
+            # regions whose static classification is uncertain; "measured"
+            # all of them, brute force.  Seeds stay seed+2+k so any campaign
+            # that does run draws the same stream as the full workflow's.
+            if static_plan is not None and cfg.plan_source == "static+verify":
+                region_ids = static_plan.uncertain_regions()
+            else:
+                region_ids = list(range(n_regions))
+            if adaptive_mode and stopping.sampler_bias > 0 and region_ids:
+                sampler = StaticPriorSampler(
+                    static_plan.window_confidences(), bias=stopping.sampler_bias
+                )
+            region_specs = [
                 CampaignSpec(
                     f"region:{k}",
                     PersistPlan(objects=crit, region_freq={k: 1}),
                     seed + 2 + k,
                     per_region_n,
+                    sampler=sampler,
                 )
                 for k in region_ids
             ]
-        campaigns = runner.run(specs)
-        best = campaigns["best"]
+        specs = [CampaignSpec("best", PersistPlan.best(crit, app), seed + 1, n_tests)]
+        adaptive_report = None
+        if adaptive_mode:
+            c_base = baseline.recomputability
+            overheads = {k: l[k] for k in range(n_regions)}
+            decisions = {r.index: r.decision for r in static_plan.regions}
+            campaigned = set(region_ids)
+            best_in_rounds = cfg.plan_source == "adaptive"
+            if best_in_rounds:
+                # Pure adaptive mode: the knapsack's gains are region-vs-
+                # baseline, so the persist-everything reference never feeds
+                # the decision.  Its remaining uncertainty therefore cannot
+                # change the plan — the stopping criterion applies to it
+                # verbatim, and it rides the same rounds as the regions,
+                # stopping the moment the region evidence settles the plan.
+                best = None
+                rounds_specs = specs + region_specs
+            else:
+                # static+verify composition: confident-persist regions take
+                # their gain from the reference headroom, so the reference
+                # *is* consumed by the decision and must be measured in full.
+                best = runner.run(specs)["best"]
+                rounds_specs = region_specs
+
+            def _fixed_gain(k: int) -> float:
+                # regions static+verify trusts without measuring: same gain
+                # attribution as the non-adaptive static+verify path below
+                if decisions.get(k) == "persist":
+                    return best.recomputability - c_base
+                return 0.0
+
+            def _evidence(partial, executed, planned_tests, key, z):
+                camp = partial[key]
+                vals = [1.0 if rec.outcome == "S1" else 0.0 for rec in camp.records]
+                ws = [rec.weight for rec in camp.records]
+                done = {t.index for t in executed[key]}
+                rem = [
+                    t.weight for t in planned_tests[key] if t.index not in done
+                ]
+                return final_rate_interval(vals, ws, rem, z)
+
+            def _should_stop(partial, executed, planned_tests) -> bool:
+                point_gains: Dict[int, float] = {}
+                boxes: Dict[int, Tuple[float, float]] = {}
+                for k in range(n_regions):
+                    if k in campaigned:
+                        lo, hi, rate, _ = _evidence(
+                            partial, executed, planned_tests,
+                            f"region:{k}", stopping.z,
+                        )
+                        if rate != rate:  # no evidence yet
+                            return False
+                        point_gains[k] = rate - c_base
+                        boxes[k] = (lo - c_base, hi - c_base)
+                    else:
+                        point_gains[k] = _fixed_gain(k)
+                return selection_invariant(
+                    point_gains, boxes, overheads, c_base, t_s=t_s, tau=tau,
+                    freq_options=freq_options, max_corners=stopping.max_corners,
+                ) is not None
+
+            if rounds_specs:
+                rounds = runner.run_rounds(
+                    rounds_specs, stopping.round_tests, stopping.min_rounds,
+                    _should_stop,
+                )
+            else:
+                rounds = RoundsResult({}, {}, {}, 0, 0, False)
+            if best_in_rounds:
+                best = rounds.campaigns["best"]
+                campaigns = dict(rounds.campaigns)
+            else:
+                campaigns = {"best": best, **rounds.campaigns}
+            evidence = []
+            for k in region_ids:
+                lo, hi, rate, n_eff = _evidence(
+                    rounds.campaigns, rounds.executed, rounds.planned,
+                    f"region:{k}", stopping.z,
+                )
+                evidence.append(RegionEvidence(
+                    region=k,
+                    executed=rounds.campaigns[f"region:{k}"].n,
+                    planned=per_region_n,
+                    rate=rate,
+                    interval=(lo, hi),
+                    n_eff=n_eff,
+                ))
+            reference_ev = None
+            if best_in_rounds:
+                lo, hi, rate, n_eff = _evidence(
+                    rounds.campaigns, rounds.executed, rounds.planned,
+                    "best", stopping.z,
+                )
+                reference_ev = RegionEvidence(
+                    region=-1,
+                    executed=best.n,
+                    planned=n_tests,
+                    rate=rate,
+                    interval=(lo, hi),
+                    n_eff=n_eff,
+                )
+            adaptive_report = AdaptiveReport(
+                rounds_executed=rounds.rounds_executed,
+                rounds_total=rounds.rounds_total,
+                stopped_early=rounds.stopped_early,
+                tests_executed=sum(c.n for c in rounds.campaigns.values()),
+                tests_planned=(
+                    per_region_n * len(region_ids)
+                    + (n_tests if best_in_rounds else 0)
+                ),
+                regions=tuple(evidence),
+                stopping=stopping.spec(),
+                sampler=None if sampler is None else sampler.spec(),
+                reference=reference_ev,
+            )
+        else:
+            specs += region_specs
+            campaigns = runner.run(specs)
+            best = campaigns["best"]
 
         if region_measure == "paper":
             c_base_map = baseline.per_region_recomputability()
@@ -729,7 +1050,10 @@ def run_workflow(app: IterativeApp, config=None, /, **kwargs) -> WorkflowResult:
             for k in range(n_regions):
                 camp_k = campaigns.get(f"region:{k}")
                 if camp_k is not None:
-                    gains[k] = camp_k.recomputability - baseline.recomputability
+                    # the self-normalized weighted rate: recovers the
+                    # uniform-draw estimate under importance sampling and is
+                    # numerically identical to .recomputability without it
+                    gains[k] = camp_k.weighted_recomputability - baseline.recomputability
                 elif decisions.get(k) == "persist":
                     # confident static persist: the best campaign's headroom
                     # is the gain flushing every iteration at one region can
@@ -763,4 +1087,5 @@ def run_workflow(app: IterativeApp, config=None, /, **kwargs) -> WorkflowResult:
         plan_source=cfg.plan_source,
         tests_executed=int(executed),
         static_plan=static_plan,
+        adaptive=adaptive_report,
     )

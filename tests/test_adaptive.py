@@ -1,0 +1,359 @@
+"""Adaptive crash-campaign scheduler vs the brute-force W+2 workflow.
+
+The differential contract: ``plan_source="adaptive"`` with the uniform
+sampler (``sampler_bias=0``) draws the *identical* planned tests as the
+brute-force workflow, so early stopping — which only ever fires when the
+knapsack decision is provably invariant to the remaining uncertainty —
+must land the byte-identical final plan on every suite app while
+executing strictly fewer crash tests.  With the importance sampler on
+(the default ``sampler_bias``), draws differ; the estimator is unbiased
+for the same rates, and the per-app agreement is pinned in the golden
+(cg's knife-edge knapsack decision is the one documented divergence).
+
+Oracle: ``tests/golden/adaptive_goldens.json`` — regenerate with
+
+    PYTHONPATH=src python tests/test_adaptive.py --regen
+
+which re-runs the brute-force workflow live (cross-checked against
+``tests/golden/static_agreement.json``) and re-pins the adaptive
+tests-executed counts for both sampler settings.
+"""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.core import (
+    CrashTester,
+    SequentialConfig,
+    WorkflowConfig,
+    load_workflow,
+    run_workflow,
+    save_workflow,
+)
+from repro.hpc.suite import ci_app, default_cache
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "adaptive_goldens.json")
+BRUTE_GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                            "static_agreement.json")
+SUITE = ("sor", "pagerank", "kmeans", "heat", "mg", "cg", "montecarlo")
+N_TESTS = 40          # the golden oracle size (matches static_agreement.json)
+
+#: the provable configuration: uniform draws (bit-identical to brute force)
+#: + sequential stopping.  round_tests matches SequentialConfig's default so
+#: the exact and default-IS runs stop on the same round geometry.
+EXACT_STOPPING = SequentialConfig(sampler_bias=0.0)
+
+
+def _cfg(cache, stopping=None, **kw):
+    return WorkflowConfig(
+        n_tests=N_TESTS, seed=0, cache=cache, plan_source="adaptive",
+        stopping=stopping, **kw,
+    )
+
+
+def _plan_key(wf):
+    return {
+        "critical": list(wf.plan.objects),
+        "region_freq": {str(k): v for k, v in sorted(wf.plan.region_freq.items())},
+    }
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def brute_golden():
+    with open(BRUTE_GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def exact_runs():
+    """One uniform-sampler adaptive workflow per suite app (the cheap side
+    of the differential: early stopping makes these cost less than brute)."""
+    out = {}
+    for name in SUITE:
+        app = ci_app(name)
+        out[name] = run_workflow(app, _cfg(default_cache(app),
+                                           stopping=EXACT_STOPPING))
+    return out
+
+
+# ------------------------------------------------------------- differential
+def test_exact_adaptive_plan_equals_brute_force(exact_runs, golden, brute_golden):
+    """Uniform-sampler adaptive == brute force on EVERY suite app."""
+    for name in SUITE:
+        wf = exact_runs[name]
+        brute = brute_golden[name]
+        assert list(wf.plan.objects) == brute["critical"], name
+        assert {str(k): v for k, v in wf.plan.region_freq.items()} \
+            == brute["region_freq"], name
+        # strictly fewer tests than the brute-force total, never more
+        assert wf.tests_executed < brute["n_tests_total"], name
+
+
+def test_exact_adaptive_goldens_pinned(exact_runs, golden):
+    """Tests-executed counts and stop rounds are deterministic — pinned."""
+    for name in SUITE:
+        wf, g = exact_runs[name], golden[name]["exact"]
+        rep = wf.adaptive
+        assert wf.tests_executed == g["tests_executed"], name
+        assert rep.stopped_early == g["stopped_early"], name
+        assert rep.rounds_executed == g["rounds_executed"], name
+        assert rep.rounds_total == g["rounds_total"], name
+        assert _plan_key(wf) == golden[name]["plan"], name
+
+
+def test_exact_adaptive_savings_bar(exact_runs, golden, brute_golden):
+    """>= 40% fewer executed crash tests on at least 3 suite apps."""
+    cleared = [
+        name for name in SUITE
+        if 1 - exact_runs[name].tests_executed
+        / brute_golden[name]["n_tests_total"] >= 0.40
+    ]
+    assert len(cleared) >= 3, cleared
+
+
+def test_adaptive_report_evidence(exact_runs):
+    """The report carries per-region evidence consistent with the run."""
+    for name in SUITE:
+        rep = exact_runs[name].adaptive
+        assert rep.tests_skipped == rep.tests_planned - rep.tests_executed
+        assert rep.tests_skipped >= 0
+        # uniform sampler: no IS spec, unit weights, n_eff == n
+        assert rep.sampler is None
+        for ev in rep.regions:
+            assert 0 <= ev.executed <= ev.planned
+            lo, hi = ev.interval
+            assert 0.0 <= lo <= ev.rate <= hi <= 1.0
+            assert ev.n_eff == pytest.approx(ev.executed)
+        # pure adaptive mode: the persist-everything reference rode the
+        # rounds and carries its own evidence
+        assert rep.reference is not None
+        assert rep.reference.region == -1
+        assert rep.reference.executed == exact_runs[name].best_campaign.n
+
+
+# ------------------------------------------------------- default (IS) config
+def test_default_is_agreement_pinned(golden, brute_golden):
+    """Default sampler_bias: per-app plan agreement as pinned (cg is the
+    documented knife-edge divergence), savings counts pinned."""
+    for name in ("pagerank", "kmeans", "cg"):
+        app = ci_app(name)
+        wf = run_workflow(app, _cfg(default_cache(app)))
+        g = golden[name]["default_is"]
+        agrees = {str(k): v for k, v in wf.plan.region_freq.items()} \
+            == brute_golden[name]["region_freq"]
+        assert agrees == g["plan_matches"], name
+        assert wf.tests_executed == g["tests_executed"], name
+        assert wf.adaptive.sampler is not None
+        assert wf.adaptive.sampler["kind"] == "static-prior"
+
+
+@pytest.mark.slow
+def test_default_is_agreement_all_apps(golden, brute_golden):
+    """Full-suite default-IS sweep: >= 6/7 plans match brute force."""
+    matches = 0
+    for name in SUITE:
+        app = ci_app(name)
+        wf = run_workflow(app, _cfg(default_cache(app)))
+        g = golden[name]["default_is"]
+        agrees = {str(k): v for k, v in wf.plan.region_freq.items()} \
+            == brute_golden[name]["region_freq"]
+        assert agrees == g["plan_matches"], name
+        assert wf.tests_executed == g["tests_executed"], name
+        matches += agrees
+    assert matches >= 6
+
+
+# ------------------------------------------------- determinism + kill/resume
+def _wf_dicts(wf):
+    return {
+        "baseline": [dataclasses.asdict(r) for r in wf.baseline_campaign.records],
+        "best": [dataclasses.asdict(r) for r in wf.best_campaign.records],
+        "plan": (wf.plan.objects, tuple(sorted(wf.plan.region_freq.items()))),
+        "adaptive": wf.adaptive.to_payload(),
+        "summary": wf.summary(),
+    }
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_workers", [2, 4])
+def test_adaptive_worker_parity(n_workers):
+    """Stopping is a pure function of the completed-round prefix: every
+    worker count produces the bit-identical workflow."""
+    app = ci_app("kmeans")
+    cache = default_cache(app)
+    one = run_workflow(app, _cfg(cache, n_workers=1))
+    par = run_workflow(app, _cfg(cache, n_workers=n_workers))
+    assert _wf_dicts(one) == _wf_dicts(par), n_workers
+
+
+def test_adaptive_resume_after_kill(tmp_path):
+    """An adaptive workflow killed mid-run (torn trailing store line)
+    resumes bit-identically, re-executing only the missing shards, and
+    stops on the same round."""
+    app = ci_app("kmeans")
+    cache = default_cache(app)
+    path = str(tmp_path / "wf.jsonl")
+    kw = dict(store_path=path)
+    full = run_workflow(app, _cfg(cache, **kw))
+    assert full.adaptive.stopped_early
+
+    lines = open(path).read().splitlines()
+    n_shard_lines = sum(1 for ln in lines if '"type": "shard"' in ln)
+    assert n_shard_lines >= 4
+    keep = len(lines) // 2
+    with open(path, "w") as f:
+        f.write("\n".join(lines[:keep]) + "\n"
+                + lines[keep][: len(lines[keep]) // 2])
+
+    executed = []
+    orig = CrashTester.run_window_tests
+
+    def counting(self, crash_iter, tests):
+        executed.append(crash_iter)
+        return orig(self, crash_iter, tests)
+
+    CrashTester.run_window_tests = counting
+    try:
+        resumed = run_workflow(app, _cfg(cache, **kw))
+    finally:
+        CrashTester.run_window_tests = orig
+    assert _wf_dicts(resumed) == _wf_dicts(full)
+    kept_shards = sum(1 for ln in lines[:keep] if '"type": "shard"' in ln)
+    assert len(executed) == n_shard_lines - kept_shards
+
+    # a completed store resumes executing nothing, same stop round
+    executed.clear()
+    CrashTester.run_window_tests = counting
+    try:
+        again = run_workflow(app, _cfg(cache, **kw))
+    finally:
+        CrashTester.run_window_tests = orig
+    assert _wf_dicts(again) == _wf_dicts(full)
+    assert executed == []
+
+
+# ------------------------------------------------------ composition + config
+def test_static_verify_composes_with_stopping():
+    """static+verify + stopping: only the uncertain regions get (sequential)
+    campaigns; the persist-everything reference runs in full because the
+    confident regions' fixed gains consume it."""
+    app = ci_app("heat")          # uncertain regions [1, 2]
+    cache = default_cache(app)
+    wf = run_workflow(app, WorkflowConfig(
+        n_tests=N_TESTS, seed=0, cache=cache, plan_source="static+verify",
+        stopping=SequentialConfig()))
+    assert dict(wf.plan.region_freq) == {}        # matches measured golden
+    rep = wf.adaptive
+    assert rep is not None
+    assert rep.reference is None                  # best ran in full
+    assert wf.best_campaign.n == N_TESTS
+    assert {ev.region for ev in rep.regions} == {1, 2}
+    assert wf.tests_executed < 170                # brute-force total on heat
+
+
+def test_adaptive_artifact_roundtrip(exact_runs, tmp_path):
+    wf = exact_runs["pagerank"]
+    path = str(tmp_path / "pagerank_adaptive.json")
+    save_workflow(path, wf)
+    art = load_workflow(path)
+    rep = art.adaptive_report()
+    assert rep.to_payload() == wf.adaptive.to_payload()
+    assert rep.stopped_early == wf.adaptive.stopped_early
+    assert rep.reference is not None
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="isolated"):
+        WorkflowConfig(plan_source="adaptive", region_measure="paper")
+    with pytest.raises(ValueError, match="shared"):
+        WorkflowConfig(plan_source="adaptive", scheduler="serial")
+    with pytest.raises(ValueError, match="stopping"):
+        WorkflowConfig(plan_source="measured", stopping=SequentialConfig())
+    with pytest.raises(ValueError, match="round_tests"):
+        SequentialConfig(round_tests=0)
+    with pytest.raises(ValueError, match="min_rounds"):
+        SequentialConfig(min_rounds=0)
+    with pytest.raises(ValueError, match="z"):
+        SequentialConfig(z=-1.0)
+    with pytest.raises(ValueError, match="sampler_bias"):
+        SequentialConfig(sampler_bias=-0.5)
+
+
+def test_adaptive_spec_identity():
+    """Adaptive configs carry their stopping knobs in spec(); measured
+    configs stay byte-identical to historical fingerprints."""
+    cfg = WorkflowConfig(n_tests=8, plan_source="adaptive")
+    d = json.loads(json.dumps(cfg_spec_dict(cfg)))
+    assert d["stopping"] == SequentialConfig().spec()
+    measured = WorkflowConfig(n_tests=8)
+    assert "stopping" not in cfg_spec_dict(measured)
+
+
+def cfg_spec_dict(cfg):
+    from repro.core import CacheConfig, PersistPlan
+
+    app = ci_app("kmeans")
+    tester = CrashTester(app, PersistPlan.none(), CacheConfig(), seed=0)
+    return cfg.spec(app, tester)
+
+
+# ------------------------------------------------------------------- regen
+def _regen():
+    out = {}
+    for name in SUITE:
+        app = ci_app(name)
+        cache = default_cache(app)
+        brute = run_workflow(app, WorkflowConfig(
+            n_tests=N_TESTS, seed=0, cache=cache))
+        with open(BRUTE_GOLDEN) as f:
+            pinned = json.load(f)[name]
+        if brute.tests_executed != pinned["n_tests_total"]:
+            raise SystemExit(
+                f"{name}: live brute force disagrees with "
+                f"static_agreement.json — regenerate that golden first")
+        exact = run_workflow(app, _cfg(cache, stopping=EXACT_STOPPING))
+        default = run_workflow(app, _cfg(cache))
+        brute_freq = {str(k): v for k, v in sorted(brute.plan.region_freq.items())}
+        if _plan_key(exact) != {"critical": list(brute.plan.objects),
+                                "region_freq": brute_freq}:
+            raise SystemExit(f"{name}: exact adaptive plan != brute force")
+        out[name] = {
+            "plan": _plan_key(exact),
+            "brute_tests": brute.tests_executed,
+            "exact": {
+                "tests_executed": exact.tests_executed,
+                "stopped_early": exact.adaptive.stopped_early,
+                "rounds_executed": exact.adaptive.rounds_executed,
+                "rounds_total": exact.adaptive.rounds_total,
+            },
+            "default_is": {
+                "tests_executed": default.tests_executed,
+                "plan_matches": _plan_key(default)["region_freq"] == brute_freq,
+                "stopped_early": default.adaptive.stopped_early,
+            },
+        }
+        print(f"{name}: exact {exact.tests_executed}/{brute.tests_executed} "
+              f"default {default.tests_executed} "
+              f"(match={out[name]['default_is']['plan_matches']})")
+    with open(GOLDEN, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"wrote {GOLDEN}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        sys.exit("usage: python tests/test_adaptive.py --regen")

@@ -24,10 +24,40 @@ GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
 SUITE = ("sor", "pagerank", "kmeans", "heat", "mg", "cg", "montecarlo")
 
 #: apps whose static region decisions exactly match the measured workflow.
-#: mg and cg are the two designed-in misses (coarse-grid correction and the
-#: CG update chain are decided by measured gains the dataflow walk cannot
-#: see); everything else must agree — acceptance bar is >= 5 of 7.
+#: mg and cg are the two designed-in misses; everything else must agree —
+#: acceptance bar is >= 5 of 7.
 EXPECTED_AGREE = {"sor", "pagerank", "kmeans", "heat", "montecarlo"}
+
+#: per-app expected-disagreement annotations for the two misses, asserted
+#: exactly (region sets, not just "disagrees") so drift on either side
+#: surfaces here.  Investigated and confirmed not to be classifier bugs:
+EXPECTED_DISAGREEMENT = {
+    "mg": {
+        # static persists {2, 3}; measured selects {1, 3}.  R2_coarse
+        # carries its value through untracked coarse-grid temporaries —
+        # invisible to the candidate-object dataflow walk, yet its measured
+        # gain is real.  R3_correct's write to u is immediately rewritten
+        # by R4_smooth, so its measured marginal gain is too small for the
+        # knapsack even though the walk sees "writes persist-decided u".
+        # Both misses are *confident* (mg has no uncertain regions), so
+        # static+verify cannot repair this app: the honest cost of the
+        # static path, priced into the >= 5/7 agreement bar.
+        "static_only": [2],
+        "measured_only": [1],
+        "verify_repairable": False,
+    },
+    "cg": {
+        # static persists {1, 2, 3}; measured selects {2, 3}.  x_update
+        # writes persist-decided x, but x is cheaply rebuilt from the p/r
+        # recurrences, so its measured gain misses the knapsack.  Every cg
+        # region decision is self-flagged (confidence 0.35 < threshold ->
+        # uncertain_regions [1, 2, 3]), so static+verify re-measures the
+        # lot and lands the measured plan.
+        "static_only": [1],
+        "measured_only": [],
+        "verify_repairable": True,
+    },
+}
 
 
 @pytest.fixture(scope="module")
@@ -55,6 +85,20 @@ def test_agreement_with_measured_plans(golden, plans):
             agree.add(name)
     assert len(agree) >= 5, f"static agreement below bar: {sorted(agree)}"
     assert agree == EXPECTED_AGREE
+
+
+def test_expected_disagreement_annotations(golden, plans):
+    """The two designed-in misses disagree in exactly the annotated way."""
+    for name, note in EXPECTED_DISAGREEMENT.items():
+        static = {r.index for r in plans[name].regions
+                  if r.decision == "persist"}
+        measured = set(golden[name]["persist_regions"])
+        assert sorted(static - measured) == note["static_only"], name
+        assert sorted(measured - static) == note["measured_only"], name
+        flagged = set(plans[name].uncertain_regions())
+        disagreeing = (static ^ measured)
+        assert note["verify_repairable"] == (disagreeing <= flagged), name
+    assert set(EXPECTED_DISAGREEMENT) == set(SUITE) - EXPECTED_AGREE
 
 
 def test_classification_pins(plans):
