@@ -61,6 +61,10 @@ def main() -> None:
                          "batched recompute, the default) or 'ref' (the "
                          "historical oracle); results are bit-for-bit "
                          "identical")
+    ap.add_argument("--lane-batch", type=int, default=None, metavar="N",
+                    help="restart lanes the vec engine stacks per batched-"
+                         "recompute dispatch (default: REPRO_LANE_BATCH env "
+                         "or 64); results are identical at any value")
     args = ap.parse_args()
 
     known = app_names()
@@ -81,7 +85,8 @@ def main() -> None:
           f"fault model: {fault.spec()}")
 
     base = CrashTester(
-        app, PersistPlan.none(), cache, seed=0, fault=fault, engine=args.engine
+        app, PersistPlan.none(), cache, seed=0, fault=fault, engine=args.engine,
+        lane_batch=args.lane_batch,
     ).run_campaign(args.tests, n_workers=args.workers, store_path=args.store)
     print(f"\nbaseline (no persistence): {base.class_fractions()}")
     print("per-object inconsistency -> recompute correlation (paper §5.1):")
@@ -100,7 +105,8 @@ def main() -> None:
 
     persist = tuple(critical) or (objs[0],)
     ec = CrashTester(app, PersistPlan.at_loop_end(persist, app), cache,
-                     seed=0, fault=fault, engine=args.engine).run_campaign(
+                     seed=0, fault=fault, engine=args.engine,
+                     lane_batch=args.lane_batch).run_campaign(
                          args.tests, n_workers=args.workers)
     print(f"\npersist {persist} at loop end: {ec.class_fractions()}")
     print(f"recomputability {base.recomputability:.0%} -> {ec.recomputability:.0%}")

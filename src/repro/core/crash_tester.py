@@ -231,11 +231,19 @@ class CrashTester:
         engine: Optional[str] = None,
         trace_cache: Optional[WindowTraceCache] = None,
         sampler=None,
+        lane_batch: Optional[int] = None,
     ):
         """``engine`` selects the campaign hot path — ``"vec"`` (SoA window
         simulator, batched recompute for apps with ``supports_batched_step``)
         or ``"ref"`` (the historical per-access / per-test oracle); ``None``
         resolves :func:`default_engine`.  Results are bit-for-bit identical.
+
+        ``lane_batch`` caps how many restart lanes the vec engine stacks per
+        batched-recompute call (and per shard chunk in :meth:`run_shards`);
+        ``None`` falls back to the ``REPRO_LANE_BATCH`` environment variable
+        (default 64).  Like ``engine`` it is an execution-strategy knob, not
+        an experiment parameter: campaign results and store fingerprints are
+        identical at any value.
 
         ``trace_cache`` is the cross-campaign window cache; ``None`` uses the
         process-shared one (:func:`~repro.core.trace_cache.shared_trace_cache`).
@@ -255,6 +263,7 @@ class CrashTester:
         self.max_extra_factor = max_extra_factor
         self.fault = fault if fault is not None else PowerFail()
         self.sampler = sampler
+        self.lane_batch = lane_batch
         self.engine = engine if engine is not None else default_engine()
         if self.engine not in ENGINES:
             raise ValueError(f"unknown engine {self.engine!r}; have {ENGINES}")
@@ -266,6 +275,10 @@ class CrashTester:
         self._iter_time: Optional[int] = None
         self._region_spans: Optional[List[Tuple[int, int]]] = None
         self._digest: Optional[str] = None
+        # vec-engine fast paths: one canonical steady-state trace per
+        # relative flush schedule, one init() per campaign for restart lanes
+        self._canon_trace: Dict[tuple, Tuple[WindowTrace, int]] = {}
+        self._init_base: Optional[State] = None
 
     # ---------------------------------------------------------------- golden
     def _ensure_golden(self) -> None:
@@ -297,6 +310,13 @@ class CrashTester:
     def golden_iters(self) -> int:
         self._ensure_golden()
         return self._golden_iters
+
+    def lane_batch_target(self) -> int:
+        """Lanes the vec engine stacks per batched-recompute call: the
+        constructor's ``lane_batch`` when given, else ``REPRO_LANE_BATCH``."""
+        if self.lane_batch is not None:
+            return max(1, int(self.lane_batch))
+        return _lane_batch_target()
 
     def release_caches(self) -> None:
         """Drop the golden trajectory and window-image caches.
@@ -435,10 +455,48 @@ class CrashTester:
                     self._golden_states[first], first, crash_iter
                 )
                 shared.put_payload(wkey + (int(self.cache.block_bytes),), payload)
-            result = self._trace_from_payload(payload, crash_iter)
+            result = self._trace_from_canonical(payload, first, crash_iter)
+            if result is None:
+                result = self._trace_from_payload(payload, crash_iter)
+                self._put_canonical(result[0], first, crash_iter)
             shared.put_trace(tkey, result)
         self._window_cache[crash_iter] = result
         return result
+
+    # Steady-state windows ([ci-1, ci] with ci >= 2) start from the same
+    # cold cache and replay the same event stream — the plan's flushes are
+    # the only per-window variation, and only through the *relative* firing
+    # pattern.  The cache dynamics are therefore shift-invariant in the
+    # crash iteration: one simulated trace serves every steady window with
+    # the same relative schedule, after relabeling the iteration indices in
+    # its region spans.  The ref oracle never takes this path.
+    def _canon_key(self, first: int, last: int) -> Optional[tuple]:
+        if self.engine != "vec" or first != last - 1 or first < 1:
+            return None
+        fired, objs = self._flush_schedule(first, last)
+        return (tuple((it - first, ridx) for it, ridx in fired), objs)
+
+    def _put_canonical(self, trace: WindowTrace, first: int, last: int) -> None:
+        key = self._canon_key(first, last)
+        if key is not None and key not in self._canon_trace:
+            self._canon_trace[key] = (trace, first)
+
+    def _trace_from_canonical(
+        self, payload: WindowPayload, first: int, last: int
+    ) -> Optional[Tuple[WindowTrace, Dict[int, Dict[str, np.ndarray]], int]]:
+        from dataclasses import replace
+
+        key = self._canon_key(first, last)
+        if key is None or key not in self._canon_trace:
+            return None
+        canon, canon_first = self._canon_trace[key]
+        if canon.obj_blocks != payload.obj_blocks:
+            return None
+        delta = first - canon_first
+        spans = [(s, it + delta, r, t0, t1) for (s, it, r, t0, t1) in canon.spans]
+        trace = canon if delta == 0 else replace(canon, spans=spans)
+        crash_span_start = next(t0 for (s, it, r, t0, t1) in trace.spans if it == last)
+        return trace, payload.seq_values, crash_span_start
 
     # -------------------------------------------------------------- planning
     def region_time_spans(self) -> List[Tuple[int, int]]:
@@ -714,6 +772,21 @@ class CrashTester:
             l.state = s
         return []
 
+    def _restart_init_cached(self, persisted: Mapping[str, np.ndarray]) -> State:
+        """vec-path ``restart_init``: ``init()`` is deterministic in the
+        seed, so restart lanes deep-copy one memoized base state instead of
+        re-running it per lane.  Apps overriding ``restart_init`` keep their
+        own semantics (and cost)."""
+        if type(self.app).restart_init is not IterativeApp.restart_init:
+            return self.app.restart_init(self.seed, persisted)
+        if self._init_base is None:
+            self._init_base = self.app.init(self.seed)
+        state = {k: np.array(v, copy=True) for k, v in self._init_base.items()}
+        for k, v in persisted.items():
+            if k in state:
+                state[k] = np.array(v, copy=True).astype(state[k].dtype, copy=False)
+        return state
+
     def _classify_lanes_batched(
         self, lanes: Sequence[Tuple[Mapping[str, np.ndarray], int]]
     ) -> List[Tuple[str, int, float]]:
@@ -736,7 +809,7 @@ class CrashTester:
         live: List[CrashTester._Lane] = []
         for i, (persisted, restart_iter) in enumerate(lanes):
             try:
-                state = app.restart_init(self.seed, persisted)
+                state = self._restart_init_cached(persisted)
             except Exception:  # noqa: BLE001 - serial path: any failure is S3
                 out[i] = ("S3", 0, float("nan"))
                 continue
@@ -744,6 +817,38 @@ class CrashTester:
             if lane.it >= golden_iters:
                 lane.phase = "B0"  # run_to_completion would execute nothing
             live.append(lane)
+
+        # jit-resident phase A: apps with a lane driver run the whole
+        # run-to-completion loop in one donated-buffer dispatch per bucket
+        # instead of one run_iteration_batch dispatch per iteration; lanes
+        # the driver cannot decide bit-exactly (blow-ups, overflow screens)
+        # come back flagged and are reclassified through the serial path,
+        # which also owns their exception capture (S3 semantics untouched)
+        a_entry = [l for l in live if l.phase == "A"]
+        if a_entry and app.supports_lane_driver:
+            try:
+                sts, nits, oks = app.advance_lanes(
+                    [l.state for l in a_entry], [l.it for l in a_entry],
+                    golden_iters,
+                )
+            except Exception as e:  # noqa: BLE001 - driver is an optimization
+                import warnings
+
+                warnings.warn(
+                    f"{app.name}: advance_lanes raised ({e!r}); falling back "
+                    f"to the host-loop phase A — the lane driver is broken",
+                    RuntimeWarning, stacklevel=2,
+                )
+            else:
+                for l, s, nit, ok in zip(a_entry, sts, nits, oks):
+                    if ok:
+                        l.state = s
+                        l.it = int(nit)
+                        l.phase = "B0"
+                    else:
+                        out[l.index] = self._restart_and_classify(*lanes[l.index])
+                        l.phase = "done"
+                live = [l for l in live if l.phase != "done"]
 
         active = live
         while active:
@@ -1029,7 +1134,7 @@ class CrashTester:
                     on_shard(ci, recs)
             return out
 
-        target = _lane_batch_target()
+        target = self.lane_batch_target()
         chunk: List[Tuple[int, Sequence[PlannedTest]]] = []
         lanes_in_chunk = 0
         for ci, ts in shards.items():
@@ -1179,7 +1284,7 @@ class CrashTester:
                 n_workers=min(n_workers, len(pending)),
                 app=self.app, cache=self.cache,
                 max_extra_factor=self.max_extra_factor, fault=self.fault,
-                engine=self.engine,
+                engine=self.engine, lane_batch=self.lane_batch,
             ) as ex:
                 futs = {
                     ex.submit(_shard_worker_run, "", self.plan, self.seed, ci, ts): ci
@@ -1202,7 +1307,7 @@ class CrashTester:
 # workflow's campaigns over the same pool, so a worker pays each campaign's
 # golden run once and then amortises it across every shard it executes.
 _WORKER_HOST: Optional[
-    Tuple[IterativeApp, CacheConfig, float, Optional[FaultModel], Optional[str]]
+    Tuple[IterativeApp, CacheConfig, float, Optional[FaultModel], Optional[str], Optional[int]]
 ] = None
 _WORKER_TESTERS: "OrderedDict[str, Tuple[PersistPlan, int, CrashTester]]" = None  # type: ignore[assignment]
 #: LRU bound on coexisting per-campaign testers in one worker: each pins a
@@ -1219,11 +1324,12 @@ def _shard_worker_init(
     max_extra_factor: float,
     fault: Optional[FaultModel] = None,
     engine: Optional[str] = None,
+    lane_batch: Optional[int] = None,
 ) -> None:
     global _WORKER_HOST, _WORKER_TESTERS
     from collections import OrderedDict
 
-    _WORKER_HOST = (app, cache, max_extra_factor, fault, engine)
+    _WORKER_HOST = (app, cache, max_extra_factor, fault, engine, lane_batch)
     _WORKER_TESTERS = OrderedDict()
 
 
@@ -1241,10 +1347,11 @@ def _shard_worker_run(
     if cached is not None and (cached[0], cached[1]) == (plan, seed):
         tester = cached[2]
     else:
-        app, cache, max_extra_factor, fault, engine = _WORKER_HOST
+        app, cache, max_extra_factor, fault, engine, lane_batch = _WORKER_HOST
         tester = CrashTester(
             app, plan, cache, seed=seed,
             max_extra_factor=max_extra_factor, fault=fault, engine=engine,
+            lane_batch=lane_batch,
         )
         _WORKER_TESTERS[campaign_key] = (plan, seed, tester)
         while len(_WORKER_TESTERS) > _WORKER_TESTER_CAP:
@@ -1260,6 +1367,7 @@ def campaign_executor(
     max_extra_factor: float = 2.0,
     fault: Optional[FaultModel] = None,
     engine: Optional[str] = None,
+    lane_batch: Optional[int] = None,
 ) -> ProcessPoolExecutor:
     """A shard worker pool bound to one (app, cache, fault) payload.
 
@@ -1275,5 +1383,5 @@ def campaign_executor(
         max_workers=n_workers,
         mp_context=ctx,
         initializer=_shard_worker_init,
-        initargs=(app, cache, max_extra_factor, fault, engine),
+        initargs=(app, cache, max_extra_factor, fault, engine, lane_batch),
     )

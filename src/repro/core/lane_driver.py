@@ -1,0 +1,284 @@
+"""Jit-resident multi-window lane driver for the vectorized campaign engine.
+
+PR 5 batched the *dispatches* of lane recompute (one ``run_iteration_batch``
+call advances every lane one iteration) but the loop itself stayed on the
+host: every iteration round-trips device -> host -> device and re-dispatches,
+so short-iteration apps (kmeans) pay more in dispatch overhead than the
+batching saves.  This module moves the whole phase-A run-to-completion loop
+into a single jitted program per lane bucket:
+
+* the per-lane carried state is stacked into struct-of-arrays buffers
+  (padded to the next power of two so the jit cache stays bounded, exactly
+  like :meth:`CrashTester._call_padded`) and **donated** to the program;
+* a ``lax.while_loop`` advances all lanes together with per-lane ``active``
+  masks replicating the serial control flow (step, increment, converged
+  check, iteration bound), lanes freezing in place as they finish;
+* convergence decisions that the serial path takes on the host move in-jit
+  only where they are *provably identical*: exact-op predicates (max / abs /
+  compare / isfinite) and scalar thresholds precomputed with
+  :func:`f32_monotone_cutoff`;
+* any lane whose decision the program cannot make bit-exactly (non-finite
+  decision scalars, conservative overflow screens) raises a sticky ``bad``
+  flag instead, and the caller re-runs that lane through the untouched
+  serial classifier — over-flagging costs speed, never correctness.
+
+The ref engine remains the bitwise oracle: every driver result is asserted
+identical to the serial path by the engine differentials in
+``tests/test_campaign_vec.py`` and the per-engine golden campaign pins.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Carry = Dict[str, jnp.ndarray]
+
+
+def f32_monotone_cutoff(pred: Callable[[float], bool]) -> np.float32:
+    """Largest non-negative float32 ``v`` with ``pred(float(v))`` true.
+
+    ``pred`` must be monotone over the non-negative float32 range: true on
+    an initial segment ``[0, v*]`` and false beyond.  This turns a host-side
+    float64 convergence predicate of a single float32 scalar (``sqrt(rho)/nb
+    < tol`` and friends) into the bit-exact in-jit comparison ``x <= cutoff``
+    — every float32 is exactly representable in float64, so the decision
+    boundary between adjacent float32 values is exact.
+
+    Returns ``-inf`` when even ``pred(0.0)`` is false (no value converges).
+    """
+    def val(bits: int) -> float:
+        return float(np.array([bits], np.uint32).view(np.float32)[0])
+
+    if not pred(0.0):
+        return np.float32(-np.inf)
+    lo, hi = 0, 0x7F7F_FFFF  # bit patterns of +0.0 and float32 max
+    if pred(val(hi)):
+        return np.float32(val(hi))
+    # positive float32 bit patterns are ordered like their values, so a
+    # 31-step bisection over the bit space finds the exact boundary
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if pred(val(mid)):
+            lo = mid
+        else:
+            hi = mid
+    return np.float32(val(lo))
+
+
+@dataclass(frozen=True)
+class LaneSpec:
+    """One app's jit-resident phase-A loop.
+
+    ``carry``
+        State fields stacked per lane (axis 0 = lane).  Everything else in
+        the state dict is lane-constant or recomputed before read and is
+        left untouched in the returned states.
+    ``consts``
+        Builds the lane-constant device operands (read-only objects such as
+        ``b`` / ``links`` / ``points``) from one lane's restart state —
+        ``restart_init`` rebuilds them identically for every lane.
+    ``step``
+        ``step(consts, carry) -> carry``: one main-loop iteration on the
+        stacked arrays, bitwise identical per lane to ``run_iteration``.
+    ``check``
+        ``check(consts, carry, it) -> (conv, suspect)``: the serial
+        ``converged(state, it)`` decision *after* a step, as two boolean
+        lane vectors.  ``conv`` mirrors the early-exit (including the
+        ``it >= n_iters`` bound); ``suspect`` marks lanes where the serial
+        hook would raise or where bit-exactness cannot be guaranteed in-jit
+        — those lanes are handed back for serial reclassification.
+    """
+
+    carry: Tuple[str, ...]
+    consts: Callable[[Mapping[str, np.ndarray]], Dict[str, jnp.ndarray]]
+    step: Callable[[Dict[str, jnp.ndarray], Carry], Carry]
+    check: Callable[[Dict[str, jnp.ndarray], Carry, jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]
+
+
+class JitLaneDriver:
+    """Runs a :class:`LaneSpec` as one donated-buffer jitted ``while_loop``.
+
+    One instance per app configuration (cache with :func:`cached_driver` so
+    app objects stay picklable for the campaign process pool); the jit cache
+    inside is keyed by the padded bucket shape, which padding keeps to
+    ``O(log lanes)`` entries.
+    """
+
+    def __init__(self, spec: LaneSpec):
+        self.spec = spec
+        self._consts: Dict[str, jnp.ndarray] | None = None
+        # donate the stacked lane buffers (args 1-3: carry, it, active) —
+        # phase A re-steps the same buffers hundreds of times, so in-place
+        # reuse is what keeps the driver memory-flat at large lane counts
+        self._drive = jax.jit(self._drive_impl, donate_argnums=(1, 2, 3))
+
+    def _drive_impl(self, consts, carry, it, active, stop):
+        spec = self.spec
+
+        def cond(loop):
+            _, _, act, _ = loop
+            return jnp.any(act)
+
+        def body(loop):
+            carry, it, act, bad = loop
+            new = spec.step(consts, carry)
+
+            def sel(nv, ov):
+                mask = act.reshape(act.shape + (1,) * (nv.ndim - 1))
+                return jnp.where(mask, nv, ov)
+
+            carry2 = {k: sel(new[k], carry[k]) for k in carry}
+            it2 = it + act.astype(it.dtype)
+            conv, suspect = spec.check(consts, carry2, it2)
+            bad2 = bad | (act & suspect)
+            act2 = act & ~suspect & ~conv & (it2 < stop)
+            return carry2, it2, act2, bad2
+
+        bad0 = jnp.zeros_like(active)
+        return jax.lax.while_loop(cond, body, (carry, it, active, bad0))
+
+    def advance(
+        self,
+        states: Sequence[Mapping[str, np.ndarray]],
+        its: Sequence[int],
+        stop: int,
+    ) -> Tuple[List[Mapping[str, np.ndarray]], List[int], List[bool]]:
+        """Advance every lane through the run-to-completion loop.
+
+        Replicates ``run_to_completion(state, it, stop)`` per lane: step,
+        increment, break on ``converged`` or the iteration bound.  Returns
+        ``(states, its, oks)``; ``oks[i]`` false means lane ``i`` tripped
+        the suspect mask and is returned *unmodified* — the caller must
+        reclassify it through the serial path.
+
+        Lanes enter at scattered restart iterations, and a single bucket
+        convoys everyone behind the lane with the most remaining work (every
+        padded lane computes every step until the last one exits).  Lanes
+        are therefore sorted by remaining iterations and split into a few
+        power-of-two buckets when the padded lane-iterations saved clearly
+        outweigh an extra dispatch; per-lane results are independent, so the
+        regrouping cannot change any value.
+        """
+        n = len(states)
+        rem = [max(0, int(stop) - int(it)) for it in its]
+        out_states: List[Mapping[str, np.ndarray]] = [None] * n  # type: ignore[list-item]
+        out_its: List[int] = [0] * n
+        oks: List[bool] = [False] * n
+        todo = []
+        for i in range(n):
+            if rem[i] == 0:  # run_to_completion would execute nothing
+                out_states[i], out_its[i], oks[i] = states[i], int(its[i]), True
+            else:
+                todo.append(i)
+        todo.sort(key=lambda i: -rem[i])
+        pos = 0
+        for size in _plan_buckets([rem[i] for i in todo]):
+            idx = todo[pos:pos + size]
+            pos += size
+            ss, ii, oo = self._advance_bucket(
+                [states[i] for i in idx], [its[i] for i in idx], stop
+            )
+            for j, i in enumerate(idx):
+                out_states[i], out_its[i], oks[i] = ss[j], ii[j], oo[j]
+        return out_states, out_its, oks
+
+    def _advance_bucket(
+        self,
+        states: Sequence[Mapping[str, np.ndarray]],
+        its: Sequence[int],
+        stop: int,
+    ) -> Tuple[List[Mapping[str, np.ndarray]], List[int], List[bool]]:
+        spec = self.spec
+        n = len(states)
+        if self._consts is None:
+            self._consts = {k: jnp.asarray(v) for k, v in spec.consts(states[0]).items()}
+        b = 1
+        while b < n:
+            b <<= 1
+        pad = b - n
+        carry = {}
+        for f in spec.carry:
+            rows = [np.asarray(s[f]) for s in states]
+            carry[f] = jnp.asarray(np.stack(rows + [rows[0]] * pad))
+        it0 = np.fromiter(its, np.int32, n)
+        it0 = np.concatenate([it0, np.full(pad, int(stop), np.int32)])
+        active0 = it0 < int(stop)
+        carry, itv, _, bad = self._drive(
+            self._consts, carry, jnp.asarray(it0), jnp.asarray(active0),
+            jnp.int32(int(stop)),
+        )
+        carry = {k: np.asarray(v) for k, v in carry.items()}
+        itv = np.asarray(itv)
+        bad = np.asarray(bad)
+        out_states: List[Mapping[str, np.ndarray]] = []
+        out_its: List[int] = []
+        oks: List[bool] = []
+        for i, s in enumerate(states):
+            if bad[i]:
+                out_states.append(s)
+                out_its.append(int(its[i]))
+                oks.append(False)
+                continue
+            s2 = dict(s)
+            for f in spec.carry:
+                ref = np.asarray(s[f])
+                # x64-disabled jit downcast int64 counters to int32; values
+                # are tiny iteration counts, so the round trip is lossless
+                s2[f] = carry[f][i].astype(ref.dtype, copy=False)
+            out_states.append(s2)
+            out_its.append(int(itv[i]))
+            oks.append(True)
+        return out_states, out_its, oks
+
+
+def _pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+def _plan_buckets(rem_desc: Sequence[int]) -> List[int]:
+    """Split lanes (sorted by remaining iterations, descending) into bucket
+    sizes minimizing padded lane-iterations: a bucket of ``k`` lanes costs
+    ``pow2(k) * rem_desc[first]`` while-loop iterations.  An extra bucket is
+    an extra dispatch, charged at an eighth of the single-bucket cost so the
+    split only happens when it clearly pays."""
+    n = len(rem_desc)
+    if n == 0:
+        return []
+    overhead = max(1, (_pow2(n) * rem_desc[0]) // 8)
+    best = [0] * (n + 1)  # best[i]: min cost of lanes i..n-1
+    cut = [n] * (n + 1)
+    for i in range(n - 1, -1, -1):
+        best[i] = float("inf")  # type: ignore[assignment]
+        for j in range(i + 1, n + 1):
+            c = _pow2(j - i) * rem_desc[i] + overhead + best[j]
+            if c < best[i]:
+                best[i], cut[i] = c, j
+    sizes = []
+    i = 0
+    while i < n:
+        sizes.append(cut[i] - i)
+        i = cut[i]
+    return sizes
+
+
+_DRIVER_CACHE: Dict[tuple, JitLaneDriver] = {}
+
+
+def cached_driver(key: tuple, factory: Callable[[], JitLaneDriver]) -> JitLaneDriver:
+    """Process-level driver cache keyed by app configuration.
+
+    Apps must not hold driver instances as attributes — the jitted closures
+    are unpicklable and would silently knock the app out of the campaign
+    process pool.  Worker processes repopulate their own cache on first use.
+    """
+    drv = _DRIVER_CACHE.get(key)
+    if drv is None:
+        drv = _DRIVER_CACHE[key] = JitLaneDriver(factory())
+    return drv

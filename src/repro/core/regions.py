@@ -90,6 +90,14 @@ class IterativeApp:
     #: **bitwise identical** per lane to the serial ones (vmapped elementwise
     #: jax ops are; batched matmuls generally are not — use ``lax.map``).
     supports_batched_step: bool = False
+    #: opt-in for the jit-resident lane driver: the crash tester may hand the
+    #: whole phase-A run-to-completion loop to :meth:`advance_lanes` (one
+    #: jitted ``lax.while_loop`` dispatch per lane bucket instead of one
+    #: ``run_iteration_batch`` dispatch per iteration).  Same contract as
+    #: ``supports_batched_step``, strengthened: the *convergence decision*
+    #: must also be bit-exact in-jit, or the lane must come back flagged
+    #: (``ok=False``) for serial reclassification.
+    supports_lane_driver: bool = False
 
     def regions(self) -> Tuple[Region, ...]:
         raise NotImplementedError
@@ -172,6 +180,23 @@ class IterativeApp:
     def run_iteration_batch(self, states: Sequence[State]) -> "List[State]":
         """Advance each state one main-loop iteration; pure per lane."""
         return [self.run_iteration(s) for s in states]
+
+    def advance_lanes(
+        self, states: Sequence[State], its: Sequence[int], stop: int
+    ) -> Tuple["List[State]", "List[int]", "List[bool]"]:
+        """Jit-resident phase A: run every lane's run-to-completion loop
+        (``run_to_completion(state, it, stop)`` — step, increment, break on
+        ``converged`` or ``it >= stop``) in as few device dispatches as the
+        app can manage, typically one donated-buffer ``lax.while_loop`` via
+        :class:`repro.core.lane_driver.JitLaneDriver`.
+
+        Returns ``(states, its, oks)``.  ``oks[i]`` false means the driver
+        could not decide lane ``i`` bit-exactly (blow-up, overflow screen);
+        the lane comes back **unmodified** and the caller reclassifies it
+        through the serial path.  Only consulted when
+        ``supports_lane_driver`` is set.
+        """
+        raise NotImplementedError
 
     def converged_batch(self, states: Sequence[State], its: Sequence[int]) -> "List[object]":
         """Element i is ``converged(states[i], its[i])`` — a bool, or the

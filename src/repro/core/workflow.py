@@ -101,6 +101,11 @@ class WorkflowConfig:
     store_path: Optional[str] = None
     shard_callback: Optional[Callable[[str, int], None]] = None
     engine: Optional[str] = None
+    #: vec-engine lane-bucket cap (lanes stacked per batched-recompute
+    #: dispatch); ``None`` defers to the ``REPRO_LANE_BATCH`` environment
+    #: variable.  Execution plumbing like ``engine``: results are identical
+    #: at any value, so it is excluded from :meth:`spec`.
+    lane_batch: Optional[int] = None
     #: where the persist plan comes from: ``"measured"`` (the paper's W+2
     #: campaign), ``"static"`` (the jaxpr dataflow prediction, no campaigns
     #: at all), ``"static+verify"`` (campaigns only for the regions the
@@ -185,8 +190,8 @@ class WorkflowConfig:
         """Workflow identity (JSON-round-trip safe) for stores + artifacts.
 
         Only fields that change campaign *results* participate; execution
-        plumbing (n_workers, scheduler, store_path, shard_callback, engine —
-        all bit-for-bit invariant by contract) does not.
+        plumbing (n_workers, scheduler, store_path, shard_callback, engine,
+        lane_batch — all bit-for-bit invariant by contract) does not.
         """
         from .faults import PowerFail
 
@@ -265,11 +270,13 @@ class _PerCampaignRunner:
     """The historical scheduler: each campaign runs to completion on its own
     pool (``CrashTester.run_campaign``), strictly in submission order."""
 
-    def __init__(self, app, cache, fault, n_workers, max_extra_factor=2.0, engine=None):
+    def __init__(self, app, cache, fault, n_workers, max_extra_factor=2.0, engine=None,
+                 lane_batch=None):
         self.app, self.cache, self.fault = app, cache, fault
         self.n_workers = n_workers
         self.max_extra_factor = max_extra_factor
         self.engine = engine
+        self.lane_batch = lane_batch
 
     def run(self, specs: Sequence[CampaignSpec]) -> Dict[str, CampaignResult]:
         out: Dict[str, CampaignResult] = {}
@@ -277,7 +284,7 @@ class _PerCampaignRunner:
             out[s.key] = CrashTester(
                 self.app, s.plan, self.cache, seed=s.seed,
                 max_extra_factor=self.max_extra_factor, fault=self.fault,
-                engine=self.engine,
+                engine=self.engine, lane_batch=self.lane_batch,
             ).run_campaign(s.n_tests, n_workers=self.n_workers)
         return out
 
@@ -312,6 +319,7 @@ class WorkflowOrchestrator:
         shard_callback: Optional[Callable[[str, int], None]] = None,
         max_extra_factor: float = 2.0,
         engine: Optional[str] = None,
+        lane_batch: Optional[int] = None,
     ):
         self.app, self.cache, self.fault = app, cache, fault
         self.n_workers = n_workers
@@ -319,6 +327,7 @@ class WorkflowOrchestrator:
         self.shard_callback = shard_callback
         self.max_extra_factor = max_extra_factor
         self.engine = engine
+        self.lane_batch = lane_batch
         self._testers: Dict[str, Tuple[CampaignSpec, CrashTester]] = {}
         self._ex = None
         self._pickle_checked = False
@@ -345,6 +354,7 @@ class WorkflowOrchestrator:
             self.app, spec.plan, self.cache, seed=spec.seed,
             max_extra_factor=self.max_extra_factor, fault=self.fault,
             engine=self.engine, sampler=spec.sampler,
+            lane_batch=self.lane_batch,
         )
         self._testers[spec.key] = (spec, t)
         return t
@@ -354,7 +364,7 @@ class WorkflowOrchestrator:
             self._ex = campaign_executor(
                 n_workers=self.n_workers, app=self.app, cache=self.cache,
                 max_extra_factor=self.max_extra_factor, fault=self.fault,
-                engine=self.engine,
+                engine=self.engine, lane_batch=self.lane_batch,
             )
         return self._ex
 
@@ -836,13 +846,15 @@ def run_workflow(app: IterativeApp, config=None, /, **kwargs) -> WorkflowResult:
 
     if cfg.scheduler == "serial":
         runner = _PerCampaignRunner(
-            app, cache, fault_model, cfg.n_workers, engine=cfg.engine
+            app, cache, fault_model, cfg.n_workers, engine=cfg.engine,
+            lane_batch=cfg.lane_batch,
         )
     else:
         store = None
         runner = WorkflowOrchestrator(
             app, cache, fault_model, cfg.n_workers,
             shard_callback=cfg.shard_callback, engine=cfg.engine,
+            lane_batch=cfg.lane_batch,
         )
         if cfg.store_path is not None:
             from .campaign_store import WorkflowStore

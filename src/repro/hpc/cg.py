@@ -12,6 +12,7 @@ best-achievable recomputability.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Mapping, Tuple
 
 import jax
@@ -25,6 +26,61 @@ from .common import laplacian_apply, rel_residual
 @jax.jit
 def _dot(a, b):
     return jnp.sum(a * b)
+
+
+# Batched lane hooks for the vectorized campaign engine.  CG is matrix-free
+# (the Laplacian is a stencil), so the whole iteration is elementwise chains
+# plus per-lane reductions over the *data* axis — no ``dot_general`` — and
+# vmapping is bitwise-safe.  The serial path's host-side float64 scalar math
+# (``alpha = float(rho) / float(pq)`` then NumPy's value-based cast back to
+# float32) is replicated by plain float32 division in-jit: for float32
+# operands, dividing in float64 and rounding the quotient to float32 equals
+# the direct float32 division (double rounding is innocuous at 53 >= 2*24+2,
+# Figueroa 1995), so the two pipelines agree to the bit.
+def _cg_step_core(a: dict, b: jnp.ndarray, one: jnp.ndarray, g: int, rr_every: int) -> dict:
+    """One CG iteration (matvec, x-update, r-update, p-update) on stacked
+    lanes; mirrors the serial region chain value-for-value.
+
+    The axpy-style updates run in NumPy on the serial path (multiply, round,
+    add, round); inside one XLA program the bare multiply-add contracts to an
+    FMA at LLVM codegen (``llvm.fmuladd``, below HLO — optimization barriers
+    and ``xla_allow_excess_precision=False`` do not reach it) and drifts by
+    an ulp.  Multiplying each product by ``one`` — a *runtime* 1.0f operand
+    the compiler cannot fold — forces the product to round first: the add
+    then either stays separate or contracts to the exact ``fma(prod, 1, x)``,
+    and both give the serial NumPy bits.
+    """
+    p, r, x = a["p"], a["r"], a["x"]
+    q = jax.vmap(lambda v: laplacian_apply(v, g))(p)
+    pq = jnp.sum(p * q, axis=1, keepdims=True)
+    rho = a["rho"]
+    alpha = jnp.where(pq != 0.0, rho / pq, 0.0)
+    x = x + (alpha * p) * one
+    kk = a["k"]
+    use_rr = ((kk + 1) % rr_every) == 0 if rr_every else jnp.zeros_like(kk, bool)
+    # both branches computed, selected per lane (exact select, no rounding)
+    r_true = b - jax.vmap(lambda v: laplacian_apply(v, g))(x)
+    r = jnp.where(use_rr, r_true, r - (alpha * q) * one)
+    rho_prev = rho
+    rho = jnp.sum(r * r, axis=1, keepdims=True)
+    beta = jnp.where(rho_prev != 0.0, rho / rho_prev, 0.0)
+    p = jnp.where(use_rr, r, r + (beta * p) * one)
+    return {"x": x, "r": r, "p": p, "q": q, "rho": rho,
+            "rho_prev": rho_prev, "alpha": alpha, "k": kk + 1}
+
+
+@partial(jax.jit, static_argnames=("g", "rr_every"))
+def _cg_step_batch(x, r, p, q, rho, rho_prev, alpha, k, b, one, g: int, rr_every: int):
+    out = _cg_step_core(
+        {"x": x, "r": r, "p": p, "q": q, "rho": rho, "rho_prev": rho_prev,
+         "alpha": alpha, "k": k}, b, one, g, rr_every)
+    return (out["x"], out["r"], out["p"], out["q"], out["rho"],
+            out["rho_prev"], out["alpha"], out["k"])
+
+
+@partial(jax.jit, static_argnames=("g",))
+def _lap_batch(u_b: jnp.ndarray, g: int) -> jnp.ndarray:
+    return jax.vmap(lambda u: laplacian_apply(u, g))(u_b)
 
 
 class CGApp(IterativeApp):
@@ -132,3 +188,102 @@ class CGApp(IterativeApp):
         # residual is only asserted by verify()
         nb = float(np.linalg.norm(state["b"]))
         return np.sqrt(max(rho, 0.0)) / max(nb, 1e-30) < self.tol * 0.5
+
+    # ------------------------------------------------------- batched recompute
+    # ``b`` is read-only, so the hooks stack only the per-lane vectors and
+    # close over lane 0's right-hand side.
+    supports_batched_step = True
+    supports_lane_driver = True
+
+    _CARRY = ("x", "r", "p", "q", "rho", "rho_prev", "alpha", "k")
+
+    def batched_kernels(self):
+        from ..core.regions import BatchedKernel
+
+        s = self.init(0)
+        b = jnp.asarray(s["b"])
+        rows = {f: np.stack([s[f]] * 3) for f in self._CARRY}
+        g, rr = self.grid, self.rr_every
+        args = tuple(rows[f] for f in self._CARRY)
+        return (
+            BatchedKernel("cg_step_batch",
+                          lambda *vs: _cg_step_batch(*vs, b, np.float32(1.0), g, rr),
+                          args, {i: 0 for i in range(len(args))}),
+            BatchedKernel("lap_batch", lambda ub: _lap_batch(ub, g),
+                          (rows["x"],), {0: 0}),
+        )
+
+    def run_iteration_batch(self, states):
+        b = jnp.asarray(states[0]["b"])
+        stacked = [jnp.asarray(np.stack([s[f] for s in states])) for f in self._CARRY]
+        new = _cg_step_batch(*stacked, b, np.float32(1.0), self.grid, self.rr_every)
+        new = [np.asarray(v) for v in new]
+        out = []
+        for i, s in enumerate(states):
+            s = dict(s)
+            for f, rows in zip(self._CARRY, new):
+                s[f] = rows[i].astype(s[f].dtype, copy=False)
+            out.append(s)
+        return out
+
+    def converged_batch(self, states, its):
+        # pure host scalar math on the carried rho — exactly the serial hook,
+        # with the lane-constant ||b|| computed once
+        out: list = []
+        nb = float(np.linalg.norm(states[0]["b"]))
+        for s, it in zip(states, its):
+            if it >= self.n_iters:
+                out.append(True)
+                continue
+            rho = float(s["rho"][0])
+            if not np.isfinite(rho):
+                out.append(FloatingPointError("CG blow-up"))
+            else:
+                out.append(bool(np.sqrt(max(rho, 0.0)) / max(nb, 1e-30) < self.tol * 0.5))
+        return out
+
+    def verify_batch(self, states):
+        # one batched Laplacian dispatch; the norms run in NumPy per
+        # contiguous row, exactly like the serial rel_residual
+        x_rows = np.stack([s["x"] for s in states])
+        b_rows = np.stack([s["b"] for s in states])
+        lap = np.asarray(_lap_batch(jnp.asarray(x_rows), self.grid))
+        out = []
+        for i in range(len(states)):
+            r = b_rows[i] - lap[i]
+            nb = float(np.linalg.norm(b_rows[i]))
+            res = float(np.linalg.norm(r)) / max(nb, 1e-30)
+            out.append(VerifyResult(bool(np.isfinite(res) and res < self.tol), res))
+        return out
+
+    def advance_lanes(self, states, its, stop):
+        from ..core.lane_driver import LaneSpec, cached_driver, f32_monotone_cutoff
+
+        g, rr, n_iters = self.grid, self.rr_every, self.n_iters
+        # the serial decision sqrt(max(rho,0))/max(||b||,eps) < tol/2 is a
+        # monotone float64 predicate of the carried float32 rho; ||b|| is
+        # lane-constant, so the whole decision folds to rho <= cutoff
+        nb = float(np.linalg.norm(states[0]["b"]))
+        tol = self.tol
+        cutoff = f32_monotone_cutoff(
+            lambda v: np.sqrt(max(v, 0.0)) / max(nb, 1e-30) < tol * 0.5
+        )
+
+        def step(consts, a):
+            return _cg_step_core(a, consts["b"], consts["one"], g, rr)
+
+        def check(consts, a, it):
+            rho = a["rho"][:, 0]
+            over = it >= n_iters
+            fin = jnp.isfinite(rho)
+            conv = over | (fin & (rho <= cutoff))
+            suspect = ~over & ~fin  # serial converged() would raise
+            return conv, suspect
+
+        key = ("cg", g, tol, n_iters, self._seed, rr)
+        drv = cached_driver(key, lambda: LaneSpec(
+            carry=self._CARRY,
+            consts=lambda s0: {"b": s0["b"], "one": np.float32(1.0)},
+            step=step, check=check,
+        ))
+        return drv.advance(states, its, stop)

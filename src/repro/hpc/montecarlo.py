@@ -29,6 +29,48 @@ def _tally_batch(it: jnp.ndarray, batch: int, nbins: int) -> jnp.ndarray:
     return jnp.zeros(nbins, jnp.int32).at[bins].add(1)
 
 
+# Batched hooks for the vectorized campaign engine.  The RNG is counter-based
+# (key = fold_in(base, k)), so every round is a pure function of its index:
+# one ``lax.map`` dispatch generates the tallies and radii for a whole range
+# of rounds, and the host replays the int64/float64 accumulation per lane in
+# exact serial order (the accumulators are ``exact-accumulator`` objects —
+# their update order is the verification contract, so it never moves in-jit).
+@partial(jax.jit, static_argnames=("batch", "nbins"))
+def _mc_rounds(ks: jnp.ndarray, one: jnp.ndarray, batch: int, nbins: int):
+    """Per-round (tally int32 (nbins,), rad2 float32 (batch,)) for each k in
+    ``ks``; per round bitwise identical to ``_tally_batch`` / the generate
+    region (``lax.map`` keeps each round's HLO the serial one).
+
+    The serial paths round ``sum(xy*xy)`` two different ways: ``_tally_batch``
+    computes it in-jit (the mul-add contracts to an FMA at LLVM codegen),
+    while the generate region computes it *eagerly* (mul and sum are separate
+    programs — separate roundings).  The tally path below keeps the bare
+    single-use product so its contraction matches; the scratch path rebuilds
+    the product from a ``one``-multiplied copy of ``xy`` (``one`` is a
+    *runtime* 1.0f), which blocks both CSE with the tally product and FMA
+    formation, reproducing the eager roundings.
+    """
+
+    def one_round(it):
+        key = jax.random.fold_in(jax.random.PRNGKey(1234), it)
+        xy = jax.random.normal(key, (batch, 2))
+        rad2 = jnp.sum(xy * xy, axis=-1)
+        bins = jnp.clip(jnp.sqrt(rad2).astype(jnp.int32), 0, nbins - 1)
+        tal = jnp.zeros(nbins, jnp.int32).at[bins].add(1)
+        xye = xy * one
+        rad2_s = jnp.sum((xye * xye) * one, axis=-1)
+        return tal, rad2_s.astype(jnp.float32)
+
+    return jax.lax.map(one_round, ks)
+
+
+def _pad_pow2(ks: np.ndarray) -> np.ndarray:
+    b = 1
+    while b < len(ks):
+        b <<= 1
+    return np.concatenate([ks, np.full(b - len(ks), ks[-1], ks.dtype)])
+
+
 class MonteCarloApp(IterativeApp):
     name = "montecarlo"
     candidates = ("counts", "sums", "k")
@@ -90,3 +132,63 @@ class MonteCarloApp(IterativeApp):
 
     def progress(self, state: State) -> float:
         return float(state["counts"].sum())
+
+    # ------------------------------------------------------- batched recompute
+    # converged() is the counter default and verify() is a pure host compare,
+    # so only the round generation is batched; accumulation stays host-side.
+    supports_batched_step = True
+    supports_lane_driver = True
+
+    def batched_kernels(self):
+        from ..core.regions import BatchedKernel
+
+        batch, nbins = self.batch, self.nbins
+        ks = np.arange(3, dtype=np.int32)
+        return (
+            BatchedKernel("mc_rounds", lambda kv: _mc_rounds(kv, np.float32(1.0), batch, nbins),
+                          (ks,), {0: 0}),
+        )
+
+    def _apply_round(self, s: State, tal64: np.ndarray, rad2: np.ndarray) -> State:
+        """One accumulate step from precomputed round data, in exact serial
+        order: counts, then the float64 [n, sum(rad2)] pair, then k."""
+        s = dict(s)
+        s["scratch"] = rad2.copy()
+        s["counts"] = s["counts"] + tal64
+        s["sums"] = s["sums"] + np.array([tal64.sum(), float(np.sum(rad2))])
+        s["k"] = s["k"] + 1
+        return s
+
+    def run_iteration_batch(self, states):
+        ks = np.fromiter((int(s["k"][0]) for s in states), np.int32, len(states))
+        tals, rads = _mc_rounds(jnp.asarray(_pad_pow2(ks)), np.float32(1.0), self.batch, self.nbins)
+        tals = np.asarray(tals).astype(np.int64)
+        rads = np.asarray(rads)
+        return [self._apply_round(s, tals[i], rads[i]) for i, s in enumerate(states)]
+
+    def advance_lanes(self, states, its, stop):
+        """Bespoke jit-resident phase A: the loop has no data recurrence (the
+        round stream depends only on k), so instead of a ``while_loop`` one
+        ``lax.map`` generates every round in [min(its), stop) and the host
+        replays each lane's accumulation bitwise."""
+        stop = int(stop)
+        # the generate region is keyed by the state's own k; the driver's
+        # round stream assumes k == it (the campaign bookmarks the iterator
+        # to the restart iteration, so this always holds — guard anyway)
+        oks = [int(s["k"][0]) == int(it) for s, it in zip(states, its)]
+        todo = [i for i, ok in enumerate(oks) if ok and its[i] < stop]
+        out_states = list(states)
+        out_its = [int(it) for it in its]
+        if todo:
+            lo = min(int(its[i]) for i in todo)
+            ks = np.arange(lo, stop, dtype=np.int32)
+            tals, rads = _mc_rounds(jnp.asarray(_pad_pow2(ks)), np.float32(1.0), self.batch, self.nbins)
+            tals = np.asarray(tals).astype(np.int64)
+            rads = np.asarray(rads)
+            for i in todo:
+                s = states[i]
+                for t in range(int(its[i]), stop):
+                    s = self._apply_round(s, tals[t - lo], rads[t - lo])
+                out_states[i] = s
+                out_its[i] = stop
+        return out_states, out_its, oks

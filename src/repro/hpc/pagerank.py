@@ -145,6 +145,7 @@ class PageRankApp(IterativeApp):
     # restart lane carries the identical init-rebuilt matrix — the batched
     # hooks stack only the per-lane vectors and close over lane 0's links.
     supports_batched_step = True
+    supports_lane_driver = True
 
     def batched_kernels(self):
         from ..core.regions import BatchedKernel
@@ -193,3 +194,34 @@ class PageRankApp(IterativeApp):
             r = float(np.abs(target - rank_rows[i]).sum())
             out.append(VerifyResult(bool(np.isfinite(r) and r < self.tol), r))
         return out
+
+    def advance_lanes(self, states, its, stop):
+        from ..core.lane_driver import LaneSpec, cached_driver, f32_monotone_cutoff
+
+        d, n_iters = self.damping, self.n_iters
+        # the serial decision 0 < delta < tol/2 is a monotone float64
+        # predicate of the carried float32 delta, so it folds to an exact
+        # in-jit comparison against the cutoff
+        cutoff = f32_monotone_cutoff(lambda v: v < self.tol * 0.5)
+
+        def step(consts, a):
+            y = jax.lax.map(lambda r: consts["links"] @ r, a["rank"])
+            new, delta = jax.vmap(lambda yy, rr: _damped(yy, rr, d))(y, a["rank"])
+            return {"rank": new, "y": y, "delta": delta[:, None], "k": a["k"] + 1}
+
+        def check(consts, a, it):
+            dl = a["delta"][:, 0]
+            over = it >= n_iters
+            fin = jnp.isfinite(dl)
+            conv = over | (fin & (dl > 0) & (dl <= cutoff))
+            suspect = ~over & ~fin  # serial converged() would raise
+            return conv, suspect
+
+        key = ("pagerank", self.n_nodes, self.out_degree, d, self.tol,
+               n_iters, self._seed)
+        drv = cached_driver(key, lambda: LaneSpec(
+            carry=("rank", "y", "delta", "k"),
+            consts=lambda s0: {"links": s0["links"]},
+            step=step, check=check,
+        ))
+        return drv.advance(states, its, stop)

@@ -214,29 +214,31 @@ def test_adaptive_resume_after_kill(tmp_path):
         f.write("\n".join(lines[:keep]) + "\n"
                 + lines[keep][: len(lines[keep]) // 2])
 
+    # every executed shard prepares its window exactly once, on both the
+    # per-shard and the chunked (lane-batched) vec paths
     executed = []
-    orig = CrashTester.run_window_tests
+    orig = CrashTester._prepare_window_items
 
     def counting(self, crash_iter, tests):
         executed.append(crash_iter)
         return orig(self, crash_iter, tests)
 
-    CrashTester.run_window_tests = counting
+    CrashTester._prepare_window_items = counting
     try:
         resumed = run_workflow(app, _cfg(cache, **kw))
     finally:
-        CrashTester.run_window_tests = orig
+        CrashTester._prepare_window_items = orig
     assert _wf_dicts(resumed) == _wf_dicts(full)
     kept_shards = sum(1 for ln in lines[:keep] if '"type": "shard"' in ln)
     assert len(executed) == n_shard_lines - kept_shards
 
     # a completed store resumes executing nothing, same stop round
     executed.clear()
-    CrashTester.run_window_tests = counting
+    CrashTester._prepare_window_items = counting
     try:
         again = run_workflow(app, _cfg(cache, **kw))
     finally:
-        CrashTester.run_window_tests = orig
+        CrashTester._prepare_window_items = orig
     assert _wf_dicts(again) == _wf_dicts(full)
     assert executed == []
 

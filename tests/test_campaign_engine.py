@@ -91,20 +91,22 @@ def test_resume_completes_truncated_store(mg_setup, tmp_path):
     with open(path, "w") as f:
         f.write("\n".join(lines[:3]) + "\n" + lines[3][: len(lines[3]) // 2])
 
+    # count at _prepare_window_items: once per executed shard on both the
+    # per-shard and the chunked (lane-batched) vec paths
     executed = []
-    orig = CrashTester.run_window_tests
+    orig = CrashTester._prepare_window_items
 
     def counting(self, crash_iter, tests):
         executed.append(crash_iter)
         return orig(self, crash_iter, tests)
 
-    CrashTester.run_window_tests = counting
+    CrashTester._prepare_window_items = counting
     try:
         resumed = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
             12, store_path=path
         )
     finally:
-        CrashTester.run_window_tests = orig
+        CrashTester._prepare_window_items = orig
 
     assert _dicts(resumed) == _dicts(full)
     # only the missing shards ran: 2 complete shards came from the store, the
@@ -113,13 +115,13 @@ def test_resume_completes_truncated_store(mg_setup, tmp_path):
 
     # a completed store resumes to the same result with zero shards executed
     executed.clear()
-    CrashTester.run_window_tests = counting
+    CrashTester._prepare_window_items = counting
     try:
         again = CrashTester(app, PersistPlan.none(), cache, seed=3).run_campaign(
             12, store_path=path
         )
     finally:
-        CrashTester.run_window_tests = orig
+        CrashTester._prepare_window_items = orig
     assert _dicts(again) == _dicts(full)
     assert executed == []
 

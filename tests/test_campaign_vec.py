@@ -30,6 +30,28 @@ def _small_app(name="sor"):
     return ci_app("pagerank", n_nodes=96, n_iters=60)
 
 
+#: sub-CI sizes for the fast per-app differentials — every suite app that
+#: opted into batched recompute + the jit-resident lane driver
+TINY_SIZES = {
+    "cg": dict(grid=12, n_iters=60),
+    "mg": dict(grid=16, n_iters=8),
+    "kmeans": dict(n_points=200, n_iters=6),
+    "montecarlo": dict(batch=256, n_iters=8),
+    "heat": dict(grid=16, n_iters=60),
+    "pagerank": dict(n_nodes=96, n_iters=60),
+}
+
+#: the field advance_lanes carries that a perturbation meaningfully reaches
+DRIVER_NOISE_FIELD = {
+    "cg": "x", "mg": "u", "kmeans": "centroids",
+    "montecarlo": "sums", "heat": "u", "pagerank": "rank",
+}
+
+
+def _tiny_app(name):
+    return ci_app(name, **TINY_SIZES[name])
+
+
 def _campaign(app, engine, fault=None, n_tests=8, workers=1, plan=None, tc=None):
     tester = CrashTester(
         app, plan if plan is not None else PersistPlan.none(),
@@ -93,6 +115,136 @@ def test_engines_identical_pagerank():
     assert _records_equal(ref.records, vec.records)
 
 
+@pytest.mark.parametrize("name", sorted(set(TINY_SIZES) - {"pagerank"}))
+def test_engines_identical_newly_batched(name):
+    """Full-campaign record equality, ref vs vec, on every app that gained
+    batched recompute + the lane driver in this round (kmeans was the
+    anti-case; cg/mg are the FMA-sensitive recurrences; montecarlo mixes
+    eager and jit rounding in one serial app)."""
+    ref = _campaign(_tiny_app(name), "ref", n_tests=6)
+    vec = _campaign(_tiny_app(name), "vec", n_tests=6)
+    assert _records_equal(ref.records, vec.records)
+    assert ref.class_fractions() == vec.class_fractions()
+
+
+@pytest.mark.parametrize("name", ["heat", "cg"])
+def test_engines_identical_under_bitflip(name):
+    """Silent bit flips can push restart lanes into blow-up territory, so
+    this exercises the driver's suspect-lane path (non-finite residual →
+    serial reclassification → S3) against the oracle."""
+    results = {}
+    for engine in ("ref", "vec"):
+        app = _tiny_app(name)
+        fault = get_fault_model("bit-flip", app=app)
+        results[engine] = _campaign(app, engine, fault=fault, n_tests=6)
+    assert _records_equal(results["ref"].records, results["vec"].records)
+
+
+def _serial_advance(app, s0, it, stop):
+    """The campaign's phase-A loop: step, then converged(), to the budget."""
+    s = {k: np.array(v, copy=True) for k, v in s0.items()}
+    while it < stop:
+        s = app.run_iteration(s)
+        it += 1
+        try:
+            if app.converged(s, it):
+                break
+        except FloatingPointError:
+            return s, it, False
+    return s, it, True
+
+
+@pytest.mark.parametrize("name", sorted(TINY_SIZES))
+def test_lane_driver_matches_serial_bitwise(name):
+    """advance_lanes == the serial phase-A loop, full state bitwise, for
+    lanes entering at scattered iterations (including at and near the
+    stop bound) with small per-lane perturbations."""
+    app = _tiny_app(name)
+    noise_field = DRIVER_NOISE_FIELD[name]
+    s = app.init(0)
+    traj = [s]
+    golden_iters = app.n_iters
+    it = 0
+    while it < app.n_iters:
+        s = app.run_iteration(s)
+        it += 1
+        traj.append(s)
+        if app.converged(s, it):
+            golden_iters = it
+            break
+    rng = np.random.default_rng(7)
+    entry_its = sorted({1, golden_iters // 2, max(golden_iters - 1, 1), golden_iters})
+    lanes = []
+    for ei in entry_its:
+        lane = {k: np.array(v, copy=True) for k, v in traj[ei].items()}
+        lane[noise_field] = (
+            lane[noise_field]
+            + rng.standard_normal(lane[noise_field].shape) * 1e-5
+        ).astype(lane[noise_field].dtype)
+        lanes.append((lane, ei))
+    serial = [_serial_advance(app, s0, ei, golden_iters) for s0, ei in lanes]
+    states, its, oks = app.advance_lanes(
+        [s0 for s0, _ in lanes], [ei for _, ei in lanes], golden_iters
+    )
+    for i, ((ss, sit, sok), ds, dit, ok) in enumerate(zip(serial, states, its, oks)):
+        if not sok:
+            assert not ok, f"{name} lane {i}: driver missed a raising lane"
+            continue
+        assert bool(ok), f"{name} lane {i}: driver flagged a clean lane"
+        assert int(dit) == sit, f"{name} lane {i}: stopped at {dit} != {sit}"
+        for f in ss:
+            a, b = np.asarray(ss[f]), np.asarray(ds[f])
+            assert a.dtype == b.dtype and a.shape == b.shape, (name, i, f)
+            assert np.array_equal(a.view(np.uint8), b.view(np.uint8)), (
+                f"{name} lane {i}: field {f!r} not bitwise the serial value"
+            )
+
+
+#: poisoning this field reaches the convergence decision within one step,
+#: so the serial loop raises FloatingPointError (cg decides on the carried
+#: rho = r·r, not on x)
+_POISON_FIELD = {"heat": "u", "cg": "r", "mg": "u", "pagerank": "rank"}
+
+
+@pytest.mark.parametrize("name", ["heat", "cg", "mg", "pagerank"])
+def test_lane_driver_flags_nan_lanes(name):
+    """A NaN-poisoned lane (where serial converged() raises) must come back
+    ok=False and untouched, while its healthy neighbours advance normally."""
+    app = _tiny_app(name)
+    noise_field = _POISON_FIELD[name]
+    clean = app.init(0)
+    clean = app.run_iteration(clean)
+    poisoned = {k: np.array(v, copy=True) for k, v in clean.items()}
+    poisoned[noise_field] = np.full_like(poisoned[noise_field], np.nan)
+    stop = min(app.n_iters, 6)
+    states, its, oks = app.advance_lanes([clean, poisoned], [1, 1], stop)
+    assert bool(oks[0]) and not bool(oks[1])
+    want, wit, wok = _serial_advance(app, clean, 1, stop)
+    assert wok and int(its[0]) == wit
+    for f in want:
+        np.testing.assert_array_equal(
+            np.asarray(want[f]).view(np.uint8),
+            np.asarray(states[0][f]).view(np.uint8), err_msg=f,
+        )
+
+
+def test_lane_batch_invariance():
+    """Campaign results are identical at any lane-batch setting — it is an
+    execution-strategy knob, not a semantic one."""
+    base = None
+    for lb in (None, 1, 3):
+        app = _tiny_app("kmeans")
+        tester = CrashTester(
+            app, PersistPlan.none(), default_cache(app), seed=123,
+            engine="vec", trace_cache=WindowTraceCache(0, 0), lane_batch=lb,
+        )
+        camp = tester.run_campaign(6)
+        if base is None:
+            base = camp
+        else:
+            assert _records_equal(base.records, camp.records), lb
+
+
 def test_engines_identical_with_flush_plan():
     """Flush events (plan-driven CLWB) through both engines."""
     results = {}
@@ -148,11 +300,15 @@ def test_window_traces_and_images_identical_on_app_windows():
 
 @pytest.mark.slow
 @pytest.mark.parametrize("workers", [2, 4])
-def test_vec_engine_worker_parity(workers):
+@pytest.mark.parametrize("name", ["sor", "kmeans"])
+def test_vec_engine_worker_parity(name, workers):
     """vec-engine campaigns are identical at every worker count — and to the
-    single-process ref engine."""
-    baseline = _campaign(_small_app("sor"), "ref", n_tests=10, workers=1)
-    fanned = _campaign(_small_app("sor"), "vec", n_tests=10, workers=workers)
+    single-process ref engine.  kmeans rides the jit-resident lane driver,
+    so this also proves the driver cache rebuilds identically in workers."""
+    app = _tiny_app("kmeans") if name == "kmeans" else _small_app("sor")
+    baseline = _campaign(app, "ref", n_tests=10, workers=1)
+    app2 = _tiny_app("kmeans") if name == "kmeans" else _small_app("sor")
+    fanned = _campaign(app2, "vec", n_tests=10, workers=workers)
     assert _records_equal(baseline.records, fanned.records)
 
 
@@ -282,6 +438,27 @@ def _random_window(rng):
 
 
 if HAVE_HYPOTHESIS:
+
+    @given(
+        tol=st.floats(1e-8, 1e-1, allow_nan=False, allow_infinity=False),
+        raw=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=300, deadline=None)
+    def test_f32_monotone_cutoff_property(tol, raw):
+        """The lane driver replaces each app's host-side float64 threshold
+        predicate with an exact float32 compare against a bisected cutoff:
+        for every finite non-negative f32 value v, ``v <= cutoff`` must equal
+        the original predicate ``pred(float(v))`` — otherwise an in-jit
+        convergence decision could diverge from the serial loop by one
+        iteration and break bit-for-bit equality."""
+        from repro.core.lane_driver import f32_monotone_cutoff
+
+        v = np.int32(raw).view(np.float32)
+        if not np.isfinite(v) or v < 0:
+            return
+        pred = lambda x: x < tol * 0.5  # noqa: E731 - the serial decision shape
+        cutoff = f32_monotone_cutoff(pred)
+        assert bool(v <= cutoff) == bool(pred(float(v)))
 
     @given(seed=st.integers(0, 100_000))
     @settings(max_examples=60, deadline=None)

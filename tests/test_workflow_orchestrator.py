@@ -98,18 +98,20 @@ def test_workflow_resume_after_kill(km_setup, tmp_path):
     with open(path, "w") as f:
         f.write("\n".join(lines[:keep]) + "\n" + lines[keep][: len(lines[keep]) // 2])
 
+    # count at _prepare_window_items: once per executed shard on both the
+    # per-shard and the chunked (lane-batched) vec paths
     executed = []
-    orig = CrashTester.run_window_tests
+    orig = CrashTester._prepare_window_items
 
     def counting(self, crash_iter, tests):
         executed.append(crash_iter)
         return orig(self, crash_iter, tests)
 
-    CrashTester.run_window_tests = counting
+    CrashTester._prepare_window_items = counting
     try:
         resumed = run_workflow(app, store_path=path, **kw)
     finally:
-        CrashTester.run_window_tests = orig
+        CrashTester._prepare_window_items = orig
 
     assert _wf_dicts(resumed) == _wf_dicts(full)
     kept_shards = sum(1 for ln in lines[:keep] if '"type": "shard"' in ln)
@@ -117,11 +119,11 @@ def test_workflow_resume_after_kill(km_setup, tmp_path):
 
     # a completed store resumes with zero shards executed
     executed.clear()
-    CrashTester.run_window_tests = counting
+    CrashTester._prepare_window_items = counting
     try:
         again = run_workflow(app, store_path=path, **kw)
     finally:
-        CrashTester.run_window_tests = orig
+        CrashTester._prepare_window_items = orig
     assert _wf_dicts(again) == _wf_dicts(full)
     assert executed == []
 
